@@ -1,0 +1,176 @@
+"""Shared benchmark utilities: one place that trains any method (BAFDP or
+baseline) on any synthetic dataset and evaluates RMSE/MAE in raw units —
+so every table/figure uses identical plumbing."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import FedConfig, ForecastConfig, MLP_H1, MLP_H24
+from repro.configs.forecast import ForecastConfig as FC
+from repro.core import bafdp, init_fed_state
+from repro.core.byzantine import byz_mask
+from repro.core.privacy import gaussian_c3, perturb_inputs
+from repro.core.trainers import BaselineTrainer
+from repro.data import build_windows, make_dataset
+from repro.data.windowing import client_batches, rmse_mae
+from repro.models.forecasting import (apply_forecaster, init_forecaster,
+                                      mse_loss)
+
+ROUNDS = int(os.environ.get("BENCH_ROUNDS", "150"))
+N_CLIENTS = int(os.environ.get("BENCH_CLIENTS", "8"))
+BATCH = 32
+
+# paper method -> (trainer method, forecaster backbone, dp sigma)
+METHODS = {
+    "FedGRU": ("fedavg", "gru", 0.0),
+    "Fed-NTP": ("fedavg", "lstm", 0.0),
+    "FedAtt": ("fedatt", "attn", 0.0),
+    "FedDA": ("fedda", "attn", 0.0),
+    "AFL": ("afl", "mlp", 0.0),
+    "ASPIRE-EASE": ("aspire", "mlp", 0.0),
+    "UDP": ("udp", "mlp", 0.01),
+    "NbAFL": ("nbafl", "mlp", 0.01),
+    "RSA": ("rsa", "mlp", 0.0),
+    "DP-RSA": ("dp_rsa", "mlp", 0.01),
+    "BAFDP": ("bafdp", "mlp", 0.0),
+}
+
+
+def forecast_cfg(model: str, horizon: int) -> ForecastConfig:
+    base = MLP_H1 if horizon == 1 else MLP_H24
+    return dataclasses.replace(base, model=model,
+                               name=f"{model}-h{horizon}")
+
+
+@functools.lru_cache(maxsize=16)
+def problem(dataset: str, horizon: int, n_clients: int = N_CLIENTS,
+            seed: int = 0):
+    data = make_dataset(dataset, n_clients, seed=seed)
+    cfg = forecast_cfg("mlp", horizon)
+    train, test, scalers = build_windows(data, cfg)
+    return train, test, scalers
+
+
+def eval_rmse_mae(params, cfg, test, scalers) -> Tuple[float, float]:
+    preds, ys = [], []
+    for c in range(test["x"].shape[0]):
+        p = apply_forecaster(params, jnp.asarray(test["x"][c]), cfg)
+        preds.append(scalers[c].inverse_y(np.asarray(p)))
+        ys.append(test["y_raw"][c])
+    return rmse_mae(np.concatenate(preds), np.concatenate(ys))
+
+
+def eval_fed_state(state, cfg, test, scalers) -> Tuple[float, float]:
+    """Algorithm 1's output is the per-client omega_i — each client serves
+    its own cell with its own model (the consensus z is the Byzantine-
+    robust anchor, not the deployment artifact)."""
+    import jax
+    preds, ys = [], []
+    for c in range(test["x"].shape[0]):
+        w_c = jax.tree.map(lambda l: l[c], state.W)
+        p = apply_forecaster(w_c, jnp.asarray(test["x"][c]), cfg)
+        preds.append(scalers[c].inverse_y(np.asarray(p)))
+        ys.append(test["y_raw"][c])
+    return rmse_mae(np.concatenate(preds), np.concatenate(ys))
+
+
+def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
+                rounds: int = ROUNDS, seed: int = 0,
+                input_sigma: float = 0.02,
+                active_masks: Optional[np.ndarray] = None,
+                collect: Tuple[str, ...] = (),
+                optimizer: str = "adam"):
+    """Returns (state, cfg, history dict).
+
+    Experimental setting per the paper Sec. V-D: Adam on the data/DRO
+    gradient; grid-searched DRO scale (see FedConfig.dro_weight)."""
+    fed = dataclasses.replace(fed, omega_optimizer=optimizer,
+                              dro_weight=0.01)
+    cfg = forecast_cfg("mlp", horizon)
+    train, test, scalers = problem(dataset, horizon, fed.n_clients, seed)
+    key = jax.random.PRNGKey(seed)
+    c3 = gaussian_c3(cfg.d_x + cfg.d_y, fed.dp_delta, 0.05)
+
+    def local_loss(p, batch, k, eps):
+        x, y = batch
+        return mse_loss(p, perturb_inputs(k, x, eps, input_sigma), y, cfg)
+
+    state = init_fed_state(key, lambda k: init_forecaster(k, cfg), fed)
+    step = jax.jit(functools.partial(
+        bafdp.bafdp_round, local_loss=local_loss, fed=fed, c3=c3,
+        n_samples=train["x"].shape[1], d_dim=cfg.d_x + cfg.d_y,
+        byz_mask=byz_mask(fed.n_clients, fed.n_byzantine)))
+    rng = np.random.RandomState(seed)
+    hist: Dict[str, List[float]] = {k: [] for k in collect}
+    for t in range(rounds):
+        x, y = client_batches(rng, train, BATCH)
+        state, m = step(state, (jnp.asarray(x), jnp.asarray(y)),
+                        jax.random.fold_in(key, t))
+        for k in collect:
+            if k == "eps_all":
+                hist[k].append(np.asarray(state.eps).copy())
+            elif k == "rmse":
+                r, _ = eval_fed_state(state, cfg, test, scalers)
+                hist[k].append(r)
+            elif k == "mae":
+                _, ma = eval_fed_state(state, cfg, test, scalers)
+                hist[k].append(ma)
+            else:
+                hist[k].append(float(m[k]))
+    return state, cfg, hist
+
+
+def train_baseline(method: str, dataset: str, horizon: int, fed: FedConfig,
+                   rounds: int = ROUNDS, seed: int = 0,
+                   collect: Tuple[str, ...] = ()):
+    trainer_kind, backbone, dp_sigma = METHODS[method]
+    assert trainer_kind != "bafdp"
+    cfg = forecast_cfg(backbone, horizon)
+    data = make_dataset(dataset, fed.n_clients, seed=seed)
+    train, test, scalers = build_windows(data, cfg)
+    key = jax.random.PRNGKey(seed)
+
+    def loss(p, b, k):
+        x, y = b
+        return mse_loss(p, x, y, cfg)
+
+    tr = BaselineTrainer(method=trainer_kind, loss=loss, fed=fed,
+                         dp_sigma=dp_sigma)
+    st = tr.init(init_forecaster(key, cfg))
+    step = tr.jitted_round()
+    rng = np.random.RandomState(seed)
+    hist: Dict[str, List[float]] = {k: [] for k in collect}
+    for t in range(rounds):
+        x, y = client_batches(rng, train, BATCH)
+        st, m = step(st, (jnp.asarray(x), jnp.asarray(y)),
+                     jax.random.fold_in(key, t))
+        for k in collect:
+            if k == "loss":
+                hist[k].append(float(m["loss"]))
+    return st["server"], cfg, (test, scalers), hist
+
+
+def run_method(method: str, dataset: str, horizon: int,
+               fed: Optional[FedConfig] = None, rounds: int = ROUNDS,
+               seed: int = 0) -> Tuple[float, float]:
+    """Train + evaluate; returns (RMSE, MAE) in raw traffic units."""
+    fed = fed or FedConfig(n_clients=N_CLIENTS)
+    if METHODS[method][0] == "bafdp":
+        state, cfg, _ = train_bafdp(dataset, horizon, fed, rounds, seed)
+        _, test, scalers = problem(dataset, horizon, fed.n_clients, seed)
+        return eval_fed_state(state, cfg, test, scalers)
+    params, cfg, (test, scalers), _ = train_baseline(
+        method, dataset, horizon, fed, rounds, seed)
+    return eval_rmse_mae(params, cfg, test, scalers)
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks: wall time of the XLA oracle path on CPU (the
+only executable backend here) + the DERIVED TPU-roofline projection for
+the Pallas kernel (bytes-bound analysis) — interpret-mode wall times are
+Python-loop artifacts and deliberately not reported as perf."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.roofline.analysis import V5E
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def main(rounds: int = 0, quick: bool = False) -> List[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # sign_agg: memory-bound -> TPU projection = bytes / HBM bw
+    C, D = 16, 2_000_000 if not quick else 200_000
+    z = jax.random.normal(key, (D,))
+    W = jax.random.normal(key, (C, D))
+    phi = jnp.zeros((D,))
+    f = jax.jit(lambda z, W, p: ref.sign_agg_ref(z, W, p, 0.01, 0.01))
+    us = _time(f, z, W, phi)
+    tpu_us = (C + 2) * D * 4 / V5E.hbm_bw * 1e6
+    rows.append(f"kernel/sign_agg_C{C}_D{D},{us:.1f},"
+                f"tpu_roofline_us={tpu_us:.1f}")
+
+    # flash attention fwd
+    B, S, H, Dh = (2, 1024, 8, 64) if not quick else (1, 256, 4, 64)
+    q = jax.random.normal(key, (B, S, H, Dh))
+    k = jax.random.normal(key, (B, S, H // 2, Dh))
+    v = jax.random.normal(key, (B, S, H // 2, Dh))
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time(f, q, k, v)
+    flops = 2 * 2 * B * H * S * S * Dh * 0.5            # causal half
+    tpu_us = flops / V5E.peak_flops * 1e6
+    rows.append(f"kernel/flash_attn_B{B}_S{S}_H{H},{us:.1f},"
+                f"tpu_compute_us={tpu_us:.2f}")
+
+    # decode attention: bandwidth-bound
+    L = 32_768 if not quick else 2048
+    q1 = jax.random.normal(key, (B, H, Dh))
+    kc = jax.random.normal(key, (B, L, H // 2, Dh))
+    vc = jax.random.normal(key, (B, L, H // 2, Dh))
+    f = jax.jit(lambda q, k, v: ref.decode_attention_ref(q, k, v, L))
+    us = _time(f, q1, kc, vc)
+    tpu_us = 2 * B * L * (H // 2) * Dh * 4 / V5E.hbm_bw * 1e6
+    rows.append(f"kernel/decode_attn_L{L},{us:.1f},tpu_roofline_us={tpu_us:.1f}")
+
+    # ssm scan
+    Bs, Ss, Ds, Ns = (2, 1024, 256, 16) if not quick else (1, 256, 64, 8)
+    a = jax.random.uniform(key, (Bs, Ss, Ds, Ns), minval=0.5, maxval=0.99)
+    b = jax.random.normal(key, (Bs, Ss, Ds, Ns)) * 0.1
+    h0 = jnp.zeros((Bs, Ds, Ns))
+    f = jax.jit(lambda a, b: ref.ssm_scan_ref(a, b, h0))
+    us = _time(f, a, b)
+    tpu_us = 3 * Bs * Ss * Ds * Ns * 4 / V5E.hbm_bw * 1e6
+    rows.append(f"kernel/ssm_scan_S{Ss}_D{Ds},{us:.1f},"
+                f"tpu_roofline_us={tpu_us:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,51 @@
+"""Table I: prediction RMSE/MAE for 9 methods x 3 datasets x H in {1,24},
+plus average rank.  (Synthetic datasets — the validation target is the
+*ordering*, esp. BAFDP's rank, not Table I's absolute values.)"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import METHODS, ROUNDS, run_method
+from repro.configs import FedConfig
+
+DATASETS = ("milano", "trento", "lte")
+HORIZONS = (1, 24)
+TABLE1_METHODS = ["FedGRU", "Fed-NTP", "FedAtt", "FedDA", "AFL",
+                  "ASPIRE-EASE", "UDP", "NbAFL", "BAFDP"]
+
+
+def main(rounds: int = ROUNDS, quick: bool = False) -> List[str]:
+    rows = []
+    methods = TABLE1_METHODS if not quick else ["FedGRU", "AFL", "BAFDP"]
+    datasets = DATASETS if not quick else ("milano",)
+    horizons = HORIZONS if not quick else (1,)
+    results: Dict[str, Dict[str, float]] = {}
+    for m in methods:
+        for d in datasets:
+            for h in horizons:
+                t0 = time.time()
+                rmse, mae = run_method(m, d, h, rounds=rounds)
+                us = (time.time() - t0) * 1e6 / max(rounds, 1)
+                results[f"{m}|{d}|{h}"] = rmse
+                rows.append(f"table1/{m}/{d}/H{h},{us:.1f},"
+                            f"rmse={rmse:.4f};mae={mae:.4f}")
+    # average rank per method (paper's summary column)
+    ranks: Dict[str, List[int]] = {m: [] for m in methods}
+    for d in datasets:
+        for h in horizons:
+            scored = sorted(methods,
+                            key=lambda m: results.get(f"{m}|{d}|{h}",
+                                                      float("inf")))
+            for i, m in enumerate(scored):
+                ranks[m].append(i + 1)
+    for m in methods:
+        rows.append(f"table1_rank/{m},0.0,avg_rank={np.mean(ranks[m]):.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,39 @@
+"""Tables II + III: prediction performance vs privacy budget ``a`` on
+Milano (a in 10..70) and Trento (a in 0.1..50)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+from benchmarks.common import ROUNDS, eval_rmse_mae, problem, train_bafdp
+from repro.configs import FedConfig
+
+MILANO_BUDGETS = (10, 20, 30, 40, 50, 60, 70)
+TRENTO_BUDGETS = (0.1, 1, 10, 20, 30, 40, 50)
+
+
+def main(rounds: int = ROUNDS, quick: bool = False) -> List[str]:
+    rows = []
+    combos = [("milano", MILANO_BUDGETS), ("trento", TRENTO_BUDGETS)]
+    if quick:
+        combos = [("milano", (10, 40))]
+    horizons = (1,) if quick else (1, 24)
+    for dataset, budgets in combos:
+        for h in horizons:
+            for a in budgets:
+                fed = FedConfig(privacy_budget_a=float(a),
+                                eps_min=min(0.01, a / 100))
+                t0 = time.time()
+                state, cfg, _ = train_bafdp(dataset, h, fed, rounds)
+                _, test, scalers = problem(dataset, h, fed.n_clients)
+                rmse, mae = eval_rmse_mae(state.z, cfg, test, scalers)
+                us = (time.time() - t0) * 1e6 / max(rounds, 1)
+                rows.append(f"table23/{dataset}/H{h}/a{a},{us:.1f},"
+                            f"rmse={rmse:.4f};mae={mae:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

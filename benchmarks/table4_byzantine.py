@@ -1,0 +1,34 @@
+"""Table IV: Byzantine robustness on Milano H in {1,24} — RSA / DP-RSA at
+ratio 0.1 vs BAFDP at ratios {0, 0.1, 0.3}."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import ROUNDS, run_method
+from repro.configs import FedConfig
+
+
+def main(rounds: int = ROUNDS, quick: bool = False) -> List[str]:
+    rows = []
+    horizons = (1,) if quick else (1, 24)
+    combos = [("RSA", 0.1), ("DP-RSA", 0.1),
+              ("BAFDP", 0.0), ("BAFDP", 0.1), ("BAFDP", 0.3)]
+    if quick:
+        combos = [("RSA", 0.1), ("BAFDP", 0.1)]
+    for h in horizons:
+        for method, ratio in combos:
+            fed = FedConfig(n_clients=10, byzantine_frac=ratio,
+                            attack="sign_flip" if ratio else "none")
+            t0 = time.time()
+            rmse, mae = run_method(method, "milano", h, fed=fed,
+                                   rounds=rounds)
+            us = (time.time() - t0) * 1e6 / max(rounds, 1)
+            rows.append(f"table4/{method}/ratio{ratio}/H{h},{us:.1f},"
+                        f"rmse={rmse:.4f};mae={mae:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,92 @@
+"""End-to-end driver: federated BAFDP training of a ~100M-class LM
+(reduced smollm family) for a few hundred steps on synthetic token data —
+the paper's technique applied to the model zoo, on the host mesh.
+
+Includes checkpointing + resume and Byzantine clients.
+
+    PYTHONPATH=src python examples/federated_lm_training.py \
+        [--arch smollm-360m] [--steps 300] [--scale smoke|100m]
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import ARCHS, reduce_for_smoke
+from repro.core.fed_state import init_fed_state
+from repro.data.tokens import lm_batch
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tr
+
+
+def scale_cfg(name: str, scale: str):
+    cfg = reduce_for_smoke(ARCHS[name])
+    if scale == "100m":
+        cfg = dataclasses.replace(
+            cfg, name=cfg.name.replace("smoke", "100m"), n_layers=8,
+            d_model=512, n_heads=8, n_kv_heads=4, d_ff=2048,
+            vocab_size=8192)
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "100m"])
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--byzantine", type=float, default=0.25)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/bafdp_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = scale_cfg(args.arch, args.scale)
+    n_params = sum(l.size for l in jax.tree.leaves(
+        jax.eval_shape(lambda k: tr.init_lm(k, cfg), jax.random.PRNGKey(0))))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M clients={args.clients} "
+          f"byz={args.byzantine}")
+
+    fed = steps_lib.fed_config_for(cfg, args.clients)
+    fed = dataclasses.replace(fed, byzantine_frac=args.byzantine,
+                              attack="sign_flip", alpha_w=2e-2,
+                              active_frac=0.75)
+    step_fn = jax.jit(steps_lib.make_train_step(cfg, fed))
+    state = init_fed_state(jax.random.PRNGKey(0),
+                           lambda k: tr.init_lm(k, cfg), fed)
+
+    ck = Checkpointer(args.ckpt, keep=2)
+    start = 0
+    restored, s0 = ck.restore_latest(state)
+    if restored is not None:
+        state, start = restored, s0
+        print(f"resumed from step {start}")
+
+    rng = np.random.RandomState(1)
+    t0 = time.time()
+    for t in range(start, args.steps):
+        b = lm_batch(rng, cfg, args.clients * args.batch, args.seq)
+        batch = {k: jnp.asarray(v).reshape(
+            (args.clients, args.batch) + v.shape[1:]) for k, v in b.items()}
+        state, m = step_fn(state, batch, jnp.asarray(t))
+        if t % max(args.steps // 10, 1) == 0:
+            print(f"  step {t:4d} loss={float(m['data_loss']):.4f} "
+                  f"eps={float(m['eps_mean']):.2f} "
+                  f"({(time.time()-t0)/(t-start+1):.2f}s/step)")
+        if t and t % 100 == 0:
+            ck.save(state, t)
+    ck.save(state, args.steps)
+    print(f"done: final loss {float(m['data_loss']):.4f}; "
+          f"checkpoint at {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

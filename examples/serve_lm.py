@@ -1,0 +1,61 @@
+"""Serving example: batched generation from a model-zoo architecture with
+the continuous-batching engine (greedy + sampled requests, ring-buffer
+sliding-window cache demo).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch olmoe-1b-7b]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduce_for_smoke
+from repro.models import transformer as tr
+from repro.serving import ServeEngine, ServeRequest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b", choices=sorted(ARCHS))
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--window", type=int, default=0,
+                    help=">0: sliding-window ring-buffer cache")
+    args = ap.parse_args()
+
+    cfg = reduce_for_smoke(ARCHS[args.arch])
+    params = tr.init_lm(jax.random.PRNGKey(0), cfg)
+    n = sum(l.size for l in jax.tree.leaves(params))
+    print(f"serving {cfg.name} ({n/1e6:.1f}M params, smoke scale), "
+          f"window={args.window or 'full cache'}")
+
+    eng = ServeEngine(params, cfg, batch=4, cache_len=256,
+                      window=args.window)
+    rng = np.random.RandomState(0)
+    reqs = [
+        ServeRequest(prompt=rng.randint(0, cfg.vocab_size, 8).astype(np.int32),
+                     max_new=args.max_new, rid=0),
+        ServeRequest(prompt=rng.randint(0, cfg.vocab_size, 5).astype(np.int32),
+                     max_new=args.max_new // 2, temperature=0.8, rid=1),
+        ServeRequest(prompt=rng.randint(0, cfg.vocab_size, 12).astype(np.int32),
+                     max_new=args.max_new, temperature=0.5, rid=2),
+        ServeRequest(prompt=rng.randint(0, cfg.vocab_size, 3).astype(np.int32),
+                     max_new=args.max_new, rid=3),
+    ]
+    t0 = time.time()
+    outs = eng.generate(reqs)
+    dt = time.time() - t0
+    total = sum(len(o) for o in outs)
+    for r, o in zip(reqs, outs):
+        print(f"  req {r.rid} (T={r.temperature}): prompt {len(r.prompt)} "
+              f"tokens -> {o.tolist()}")
+    print(f"{total} tokens in {dt:.1f}s "
+          f"({total/dt:.1f} tok/s batched, CPU smoke scale)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro — BAFDP (Byzantine-robust Asynchronous Federated learning with
+Differential Privacy) reproduction + multi-pod JAX training/serving
+framework.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpointer import save_pytree, restore_pytree, Checkpointer  # noqa: F401

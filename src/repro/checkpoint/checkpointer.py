@@ -1,0 +1,93 @@
+"""npz-based pytree checkpointing with step management.
+
+Sharded arrays are gathered to host before writing (fine at the scales we
+actually run on this container; the dry-run never materializes weights).
+Keys encode the tree path; dtypes/shapes round-trip exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        arr = np.asarray(leaf) if leaf.dtype != jnp.bfloat16 \
+            else np.asarray(leaf.astype(jnp.float32))
+        out[key] = arr   # bf16 has no numpy dtype; restore re-casts via template
+    return out, treedef
+
+
+def save_pytree(path: str, tree: Any, step: Optional[int] = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, _ = _flatten(tree)
+    np.savez_compressed(path, **flat)
+    if step is not None:
+        meta = {"step": step}
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f)
+    return path
+
+
+def restore_pytree(path: str, template: Any) -> Any:
+    data = np.load(path if path.endswith(".npz") else path + ".npz",
+                   allow_pickle=False)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(q.key) if hasattr(q, "key") else str(q.idx)
+                       for q in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+class Checkpointer:
+    """Rolling step checkpoints: ckpt_dir/step_000123.npz."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def _paths(self):
+        pat = re.compile(r"step_(\d+)\.npz$")
+        entries = []
+        for f in os.listdir(self.dir):
+            m = pat.match(f)
+            if m:
+                entries.append((int(m.group(1)), os.path.join(self.dir, f)))
+        return sorted(entries)
+
+    def save(self, tree: Any, step: int) -> str:
+        path = os.path.join(self.dir, f"step_{step:06d}.npz")
+        save_pytree(path, tree, step)
+        for s, p in self._paths()[:-self.keep]:
+            os.remove(p)
+            meta = p + ".meta.json"
+            if os.path.exists(meta):
+                os.remove(meta)
+        return path
+
+    def latest_step(self) -> Optional[int]:
+        entries = self._paths()
+        return entries[-1][0] if entries else None
+
+    def restore_latest(self, template: Any):
+        entries = self._paths()
+        if not entries:
+            return None, None
+        step, path = entries[-1]
+        return restore_pytree(path, template), step

@@ -1,0 +1,5 @@
+"""The paper's primary contribution: the BAFDP algorithm and its
+supporting pieces (DRO, LDP, Byzantine attacks, robust aggregation,
+async simulation)."""
+from repro.core.fed_state import FedState, init_fed_state  # noqa: F401
+from repro.core.bafdp import bafdp_round, make_round_fn  # noqa: F401

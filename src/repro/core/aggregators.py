@@ -1,0 +1,170 @@
+"""Robust aggregation rules (related-work baselines, Section II-C) and the
+attention-based aggregation of FedAtt / FedDA.
+
+All rules take a stacked client pytree (leading axis C) and return the
+aggregated pytree.  Distance-based rules flatten clients to (C, D) once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flat_stack(stacked: Any) -> jnp.ndarray:
+    """(C, D) fp32 matrix from a stacked client pytree."""
+    leaves = jax.tree.leaves(stacked)
+    C = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(C, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def unflatten_like(vec: jnp.ndarray, template: Any) -> Any:
+    """Inverse of flat_stack for a single (D,) vector."""
+    leaves, treedef = jax.tree.flatten(template)
+    out, o = [], 0
+    for l in leaves:
+        n = l.size
+        out.append(vec[o:o + n].reshape(l.shape).astype(l.dtype))
+        o += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def _weighted_mean(stacked: Any, w: jnp.ndarray) -> Any:
+    w = w / jnp.maximum(jnp.sum(w), 1e-9)
+
+    def f(l):
+        wl = w.reshape((-1,) + (1,) * (l.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(l.astype(jnp.float32) * wl, axis=0).astype(l.dtype)
+
+    return jax.tree.map(f, stacked)
+
+
+# ---------------------------------------------------------------------------
+def fedavg(stacked: Any, weights: Optional[jnp.ndarray] = None) -> Any:
+    C = jax.tree.leaves(stacked)[0].shape[0]
+    w = jnp.ones((C,)) if weights is None else weights
+    return _weighted_mean(stacked, w)
+
+
+def median(stacked: Any) -> Any:
+    return jax.tree.map(
+        lambda l: jnp.median(l.astype(jnp.float32), axis=0).astype(l.dtype),
+        stacked)
+
+
+def trimmed_mean(stacked: Any, trim_frac: float = 0.2) -> Any:
+    def f(l):
+        C = l.shape[0]
+        k = int(C * trim_frac)
+        s = jnp.sort(l.astype(jnp.float32), axis=0)
+        kept = s[k:C - k] if C - 2 * k > 0 else s
+        return jnp.mean(kept, axis=0).astype(l.dtype)
+
+    return jax.tree.map(f, stacked)
+
+
+def krum(stacked: Any, n_byzantine: int, multi: int = 1) -> Any:
+    """Krum / multi-Krum (Blanchard et al. 2017, ref [19])."""
+    X = flat_stack(stacked)                                    # (C, D)
+    C = X.shape[0]
+    d2 = jnp.sum((X[:, None, :] - X[None, :, :]) ** 2, axis=-1)  # (C, C)
+    d2 = d2 + jnp.eye(C) * 1e18
+    k = max(C - n_byzantine - 2, 1)
+    nearest = jnp.sort(d2, axis=1)[:, :k]
+    scores = jnp.sum(nearest, axis=1)                          # (C,)
+    if multi <= 1:
+        best = jnp.argmin(scores)
+        w = jax.nn.one_hot(best, C)
+    else:
+        _, idx = jax.lax.top_k(-scores, multi)
+        w = jnp.zeros((C,)).at[idx].set(1.0)
+    return _weighted_mean(stacked, w)
+
+
+def geomed(stacked: Any, iters: int = 64) -> Any:
+    """Geometric median by Weiszfeld iterations (GeoMed, ref [53]).
+
+    Initialized at the coordinate-wise median, not the mean: colluding
+    outliers drag the mean arbitrarily far and Weiszfeld's linear
+    convergence then needs many extra iterations to pull back (found by
+    the hypothesis property test)."""
+    X = flat_stack(stacked)
+    y = jnp.median(X, axis=0)
+    for _ in range(iters):
+        dist = jnp.maximum(jnp.linalg.norm(X - y, axis=1), 1e-8)
+        w = 1.0 / dist
+        y = jnp.sum(X * w[:, None], axis=0) / jnp.sum(w)
+    template = jax.tree.map(lambda l: l[0], stacked)
+    return unflatten_like(y, template)
+
+
+def centered_clip(stacked: Any, center: Any, tau: float = 10.0,
+                  iters: int = 3) -> Any:
+    """Centered clipping (Karimireddy et al. 2021, ref [55])."""
+    X = flat_stack(stacked)
+    v = flat_stack(jax.tree.map(lambda l: l[None], center))[0]
+    for _ in range(iters):
+        diff = X - v
+        nrm = jnp.maximum(jnp.linalg.norm(diff, axis=1, keepdims=True), 1e-9)
+        clipped = diff * jnp.minimum(1.0, tau / nrm)
+        v = v + jnp.mean(clipped, axis=0)
+    return unflatten_like(v, center)
+
+
+def fedatt(stacked: Any, server: Any, stepsize: float = 1.0,
+           temp: float = 1.0) -> Any:
+    """FedAtt (Ji et al. 2019, ref [35]): attention weights from layer-wise
+    distance between server and client models."""
+    X = flat_stack(stacked)
+    s = flat_stack(jax.tree.map(lambda l: l[None], server))[0]
+    dist = jnp.linalg.norm(X - s, axis=1)
+    att = jax.nn.softmax(-dist / temp)
+    delta = _weighted_mean(jax.tree.map(
+        lambda l, sv: l - sv[None], stacked,
+        jax.tree.map(lambda x: x.astype(jnp.float32), server)), att)
+    return jax.tree.map(lambda sv, d: (sv + stepsize * d).astype(sv.dtype),
+                        server, delta)
+
+
+def fedda(stacked: Any, server: Any, quasi_global: Any,
+          stepsize: float = 1.0) -> Any:
+    """FedDA (Zhang et al. 2021, ref [36]): dual attention — clients are
+    weighted both against the current server model and a quasi-global
+    (momentum) model."""
+    X = flat_stack(stacked)
+    s = flat_stack(jax.tree.map(lambda l: l[None], server))[0]
+    q = flat_stack(jax.tree.map(lambda l: l[None], quasi_global))[0]
+    att_s = jax.nn.softmax(-jnp.linalg.norm(X - s, axis=1))
+    att_q = jax.nn.softmax(-jnp.linalg.norm(X - q, axis=1))
+    att = 0.5 * (att_s + att_q)
+    return fedatt_update(stacked, server, att, stepsize)
+
+
+def fedatt_update(stacked, server, att, stepsize):
+    delta = _weighted_mean(jax.tree.map(
+        lambda l, sv: l - sv[None].astype(jnp.float32), stacked,
+        jax.tree.map(lambda x: x.astype(jnp.float32), server)), att)
+    return jax.tree.map(lambda sv, d: (sv + stepsize * d).astype(sv.dtype),
+                        server, delta)
+
+
+def rsa_sign(stacked: Any, server: Any) -> Any:
+    """RSA's server-side sign sum  sum_i sign(z - w_i)  (Li et al. 2019,
+    ref [22]) — the XLA oracle for the ``sign_agg`` Pallas kernel."""
+    return jax.tree.map(
+        lambda z, w: jnp.sum(jnp.sign(z[None].astype(jnp.float32)
+                                      - w.astype(jnp.float32)), axis=0),
+        server, stacked)
+
+
+AGGREGATORS = {
+    "fedavg": fedavg,
+    "median": median,
+    "trimmed_mean": trimmed_mean,
+    "krum": krum,
+    "geomed": geomed,
+    "centered_clip": centered_clip,
+}

@@ -1,0 +1,92 @@
+"""Asynchrony / wall-clock simulator (Section VI-D, Figs. 4-6).
+
+TPU SPMD is bulk-synchronous, and the paper's own experiments simulate the
+client fleet too — so wall-clock comparisons of BSFDP (sync) vs BAFDP
+(async) come from an event-driven timing model:
+
+* every client has a base compute latency (heterogeneous, lognormal) plus
+  per-round jitter and a communication latency;
+* **sync**: every round waits for the slowest participating client
+  (the "straggler" effect the paper describes);
+* **async**: the server proceeds once the fastest S clients of the round
+  have arrived; slower clients keep computing and deliver stale updates at
+  their own completion times (matching Definition 2's t-hat bookkeeping).
+
+``simulate`` returns per-round wall-clock timestamps and active masks; the
+benchmark feeds the masks into the training loop so the loss-vs-time curves
+in Figs. 4-6 use *consistent* activity patterns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DelayModel:
+    n_clients: int
+    base_compute: float = 1.0        # seconds per local round (mean)
+    hetero: float = 0.8              # spread of per-client base latency
+    jitter: float = 0.2              # per-round lognormal sigma
+    comm: float = 0.3                # up+down communication latency
+    seed: int = 0
+
+    def client_bases(self) -> np.ndarray:
+        rng = np.random.RandomState(self.seed)
+        return self.base_compute * np.exp(
+            self.hetero * rng.randn(self.n_clients))
+
+    def round_delays(self, n_rounds: int) -> np.ndarray:
+        """(n_rounds, C) per-round completion latencies."""
+        rng = np.random.RandomState(self.seed + 1)
+        base = self.client_bases()[None, :]
+        jit = np.exp(self.jitter * rng.randn(n_rounds, self.n_clients))
+        return base * jit + self.comm
+
+
+def simulate(mode: str, n_rounds: int, delays: DelayModel,
+             active_frac: float = 0.6) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (times (n_rounds,), active (n_rounds, C) bool)."""
+    C = delays.n_clients
+    d = delays.round_delays(n_rounds)
+    s = max(1, int(round(C * active_frac)))
+    times = np.zeros(n_rounds)
+    active = np.zeros((n_rounds, C), bool)
+    if mode == "sync":
+        # all clients participate; the round closes at the slowest client
+        t = 0.0
+        for r in range(n_rounds):
+            t += d[r].max()
+            times[r] = t
+            active[r] = True
+        return times, active
+    if mode != "async":
+        raise ValueError(mode)
+    # async: each client runs its own clock; the server closes a round when
+    # S results have arrived.  next_free[i] = when client i can start anew.
+    next_done = d[0].copy()
+    t = 0.0
+    for r in range(n_rounds):
+        order = np.argsort(next_done)
+        winners = order[:s]
+        t = next_done[winners].max()
+        times[r] = t
+        active[r, winners] = True
+        # winners immediately start their next local round
+        nxt = d[min(r + 1, n_rounds - 1)]
+        next_done[winners] = t + nxt[winners]
+    return times, active
+
+
+def speedup_at(loss_sync: np.ndarray, t_sync: np.ndarray,
+               loss_async: np.ndarray, t_async: np.ndarray,
+               target: float) -> Tuple[float, float]:
+    """Wall-clock to first reach ``target`` loss for each mode."""
+    def first_time(loss, t):
+        idx = np.argmax(loss <= target)
+        if loss[idx] > target:
+            return float("inf")
+        return float(t[idx])
+    return first_time(loss_sync, t_sync), first_time(loss_async, t_async)

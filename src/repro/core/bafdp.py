@@ -1,0 +1,254 @@
+"""BAFDP — the paper's algorithm (Algorithm 1, Eq. 15-22), as one jittable
+round function over stacked client pytrees.
+
+Faithful pieces:
+  * Step 1 (active clients): omega update Eq. (18) — grad of the local DRO
+    objective ``g(w_i) + rho_i^t G(w_i)`` plus the Lagrangian terms
+    ``-phi_i`` and the L1 subgradient ``psi sign(w_i - z)``; eps update
+    Eq. (19) projected to [eps_min, a].
+  * Step 2 (server): consensus update Eq. (20) with the **Byzantine clients'
+    corrupted messages inside the sign sum**, dual update Eq. (21) with the
+    ``a1^t`` regularizer of Eq. (17) / Setting 1.
+  * Step 3 (active clients): pairwise dual update Eq. (22) with ``a2^t``.
+  * Asynchrony: an active mask (S of M) freezes inactive clients; the server
+    consumes their stale ``w_i`` exactly as Algorithm 1 does; active clients
+    sync ``z_local`` only when activated (staleness is real, not cosmetic).
+
+Beyond-paper options (recorded separately in EXPERIMENTS.md Section Perf):
+``local_steps`` K>1 (consensus every K rounds) and ``compress_signs`` (int8
+sign collective, see distributed/collectives.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core import byzantine as byz_lib
+from repro.core import dro
+from repro.core.fed_state import FedState, consensus_gap
+from repro.core.privacy import eps_feasible, sigma_for_eps
+
+# local_loss(params_i, batch_i, key_i, eps_i) -> scalar
+LocalLoss = Callable[[Any, Any, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def reg_decay(alpha: float, t, power: float) -> jnp.ndarray:
+    """a^t = 1 / (alpha (t+1)^power)  (Setting 1)."""
+    return 1.0 / (alpha * jnp.power(t.astype(jnp.float32) + 1.0, power))
+
+
+def active_mask(key, n_clients: int, active_frac: float) -> jnp.ndarray:
+    """S-of-M participation for this round (uniformly random active set)."""
+    s = max(1, int(round(n_clients * active_frac)))
+    perm = jax.random.permutation(key, n_clients)
+    rank = jnp.argsort(perm)
+    return rank < s
+
+
+def _per_client_objective(local_loss: LocalLoss, fed: FedConfig, c3: float,
+                          n_samples: int, d_dim: int):
+    """Builds f(w_i, batch_i, key_i, eps_i, z_i, phi_i) = the differentiable
+    part of client i's Lagrangian (everything in Eq. 16 that involves w)."""
+
+    def obj(w_i, batch_i, key_i, eps_i):
+        g = local_loss(w_i, batch_i, key_i, eps_i)
+        G = dro.lipschitz_surrogate(w_i, fed.lipschitz_surrogate)
+        rho_i = fed.dro_weight * dro.rho(eps_i, n_samples, d_dim, c3, fed)
+        return g + rho_i * G, (g, G)
+
+    return obj
+
+
+def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
+                fed: FedConfig, c3: float, n_samples: int, d_dim: int,
+                byz_mask: jnp.ndarray) -> Tuple[FedState, Dict[str, jnp.ndarray]]:
+    """One asynchronous BAFDP round. ``batch`` leaves: (C, b, ...)."""
+    C = byz_mask.shape[0]
+    k_act, k_noise, k_byz = jax.random.split(key, 3)
+    act = active_mask(k_act, C, fed.active_frac)              # (C,) bool
+    t = state.t
+
+    # ---------------- Step 1: active clients update (w_i, eps_i) ----------
+    obj = _per_client_objective(local_loss, fed, c3, n_samples, d_dim)
+    noise_keys = jax.random.split(k_noise, C)
+
+    def client_grads(w_i, b_i, nk, eps_i):
+        (loss, (g, G)), grads = jax.value_and_grad(obj, has_aux=True)(
+            w_i, b_i, nk, eps_i)
+        return grads, loss, g, G
+
+    # grads of the smooth local objective g + rho*G; the Lagrangian terms
+    # d/dw [phi_i (z - w_i)] = -phi_i and the L1 subgradient are exact and
+    # added OUTSIDE the (optional) Adam preconditioner — normalizing the
+    # constant-magnitude psi*sign term by sqrt(v) makes it dominate near
+    # convergence (measured: +40 RMSE on Table I).
+    grads, loss_i, g_i, G_i = jax.vmap(client_grads)(
+        state.W, batch, noise_keys, state.eps)
+
+    if fed.grad_clip:
+        # per-client global-norm clip (LM-scale stability; the paper's MLP
+        # doesn't need it, billion-parameter exp-gated archs do)
+        sq = jnp.zeros((C,), jnp.float32)
+        for g in jax.tree.leaves(grads):
+            sq = sq + jnp.sum(jnp.square(g.astype(jnp.float32)),
+                              axis=tuple(range(1, g.ndim)))
+        scale = jnp.minimum(1.0, fed.grad_clip
+                            / jnp.maximum(jnp.sqrt(sq), 1e-9))
+
+        def clip(g):
+            return g * scale.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+
+        grads = jax.tree.map(clip, grads)
+
+    # Lagrangian pieces of Eq. 18:  -phi_i + psi * sign(w_i - z_local_i)
+    def lag_term(w, zl, phi_l):
+        s = jnp.sign(w.astype(jnp.float32) - zl.astype(jnp.float32))
+        return fed.psi * s - phi_l.astype(jnp.float32)
+
+    lag_grad = jax.tree.map(lag_term, state.W, state.z_local, state.phi)
+    full_grad = jax.tree.map(lambda a, b: a.astype(jnp.float32) + b,
+                             grads, lag_grad)
+
+    # omega step: plain SGD (faithful Eq. 18) or Adam (paper's Section V-D)
+    new_opt = state.opt
+    if fed.omega_optimizer == "adam" and state.opt is not None:
+        cnt = state.opt["count"] + act.astype(jnp.int32)
+        b1, b2 = fed.adam_b1, fed.adam_b2
+
+        def upd_m(m, g):
+            return b1 * m + (1 - b1) * g.astype(jnp.float32)
+
+        def upd_v(v, g):
+            return b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32))
+
+        m = jax.tree.map(upd_m, state.opt["m"], grads)
+        v = jax.tree.map(upd_v, state.opt["v"], grads)
+        bc1 = 1 - b1 ** jnp.maximum(cnt, 1).astype(jnp.float32)
+        bc2 = 1 - b2 ** jnp.maximum(cnt, 1).astype(jnp.float32)
+
+        def adam_step(w, m_l, v_l, lg):
+            r1 = bc1.reshape((-1,) + (1,) * (w.ndim - 1))
+            r2 = bc2.reshape((-1,) + (1,) * (w.ndim - 1))
+            upd = (m_l / r1) / (jnp.sqrt(v_l / r2) + fed.adam_eps)
+            # consensus terms stay linear (un-preconditioned)
+            return w.astype(jnp.float32) - fed.alpha_w * (upd + lg)
+
+        W_prop = jax.tree.map(adam_step, state.W, m, v, lag_grad)
+        new_opt = {"m": m, "v": v, "count": cnt}
+    else:
+        W_prop = jax.tree.map(
+            lambda w, g: w.astype(jnp.float32) - fed.alpha_w * g,
+            state.W, full_grad)
+
+    def mask_leaves(new, old):
+        m = act.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old.astype(jnp.float32)).astype(old.dtype)
+
+    W_new = jax.tree.map(mask_leaves, W_prop, state.W)
+    if fed.omega_optimizer == "adam" and state.opt is not None:
+        new_opt = {
+            "m": jax.tree.map(mask_leaves, new_opt["m"], state.opt["m"]),
+            "v": jax.tree.map(mask_leaves, new_opt["v"], state.opt["v"]),
+            "count": new_opt["count"],
+        }
+
+    # eps update (Eq. 19):  d/deps [ (eta + c3/eps) G ] = -c3 G / eps^2
+    d_eps = -fed.dro_weight * c3 * G_i \
+        / jnp.square(jnp.maximum(state.eps, fed.eps_min)) + state.lam
+    eps_new = eps_feasible(state.eps - fed.alpha_eps * d_eps, fed)
+    eps_new = jnp.where(act, eps_new, state.eps)
+
+    # ---------------- Step 2: server updates (z, lambda) -------------------
+    # Byzantine clients corrupt the message the server sees in the sign sum.
+    W_sent = byz_lib.apply_attack(fed.attack, k_byz, W_new, byz_mask)
+
+    if fed.local_steps == 0:
+        # structurally consensus-free round (K-local-steps off-round): the
+        # sign all-reduce must be ABSENT from the program — masking it with
+        # jnp.where still emits the collective (measured: identical
+        # roofline).  The trainer alternates this program with the
+        # consensus one.
+        a1_t = reg_decay(fed.alpha_lambda, t, fed.reg_decay_pow)
+        lam_new = jnp.maximum(state.lam + fed.alpha_lambda * (
+            (eps_new - fed.privacy_budget_a) - a1_t * state.lam), 0.0)
+        new_state = FedState(W=W_new, z=state.z, z_local=state.z_local,
+                             phi=state.phi, lam=lam_new, eps=eps_new,
+                             t=t + 1, opt=new_opt)
+        metrics = {
+            "loss": jnp.sum(loss_i * act) / jnp.maximum(jnp.sum(act), 1),
+            "data_loss": jnp.sum(g_i * act) / jnp.maximum(jnp.sum(act), 1),
+            "lipschitz": jnp.mean(G_i),
+            "eps_mean": jnp.mean(eps_new),
+            "lambda_mean": jnp.mean(lam_new),
+            "consensus_gap": jnp.zeros(()),
+            "n_active": jnp.sum(act),
+        }
+        return new_state, metrics
+
+    do_consensus = (t % fed.local_steps) == (fed.local_steps - 1)
+
+    def z_step(z_l, w_l, phi_l):
+        sgn = jnp.sign(z_l[None].astype(jnp.float32) - w_l.astype(jnp.float32))
+        if fed.compress_signs:
+            # beyond-paper: the cross-client reduction runs on int8 signs
+            # (|sum| <= C < 128), so the all-reduce moves 1 byte/coordinate
+            # instead of 4 — RSA's bounded messages make this lossless.
+            sign_sum = jnp.sum(sgn.astype(jnp.int8), axis=0,
+                               dtype=jnp.int8).astype(jnp.float32) / C
+        else:
+            sign_sum = jnp.mean(sgn, axis=0)                 # all-reduce over C
+        dz = jnp.mean(phi_l.astype(jnp.float32), axis=0) + fed.psi * sign_sum
+        z_new = z_l.astype(jnp.float32) - fed.alpha_z * dz
+        return jnp.where(do_consensus, z_new, z_l.astype(jnp.float32)) \
+            .astype(z_l.dtype)
+
+    z_new = jax.tree.map(z_step, state.z, W_sent, state.phi)
+
+    a1_t = reg_decay(fed.alpha_lambda, t, fed.reg_decay_pow)
+    lam_new = state.lam + fed.alpha_lambda * (
+        (eps_new - fed.privacy_budget_a) - a1_t * state.lam)
+    lam_new = jnp.maximum(lam_new, 0.0)
+
+    # ---------------- Step 3: active clients update phi, sync z -----------
+    a2_t = reg_decay(fed.alpha_phi, t, fed.reg_decay_pow)
+
+    def phi_step(phi_l, z_l, w_l):
+        upd = (z_l[None].astype(jnp.float32) - w_l.astype(jnp.float32)) \
+            - a2_t * phi_l.astype(jnp.float32)
+        new = phi_l.astype(jnp.float32) + fed.alpha_phi * upd
+        m = act.reshape((-1,) + (1,) * (phi_l.ndim - 1))
+        return jnp.where(m, new, phi_l.astype(jnp.float32)).astype(phi_l.dtype)
+
+    phi_new = jax.tree.map(phi_step, state.phi, z_new, W_new)
+
+    def zsync(zl_l, z_l):
+        m = act.reshape((-1,) + (1,) * (zl_l.ndim - 1))
+        return jnp.where(m, z_l[None].astype(jnp.float32),
+                         zl_l.astype(jnp.float32)).astype(zl_l.dtype)
+
+    z_local_new = jax.tree.map(zsync, state.z_local, z_new)
+
+    new_state = FedState(W=W_new, z=z_new, z_local=z_local_new, phi=phi_new,
+                         lam=lam_new, eps=eps_new, t=t + 1, opt=new_opt)
+    metrics = {
+        "loss": jnp.sum(loss_i * act) / jnp.maximum(jnp.sum(act), 1),
+        "data_loss": jnp.sum(g_i * act) / jnp.maximum(jnp.sum(act), 1),
+        "lipschitz": jnp.mean(G_i),
+        "eps_mean": jnp.mean(eps_new),
+        "lambda_mean": jnp.mean(lam_new),
+        "consensus_gap": consensus_gap(new_state),
+        "n_active": jnp.sum(act),
+    }
+    return new_state, metrics
+
+
+def make_round_fn(local_loss: LocalLoss, fed: FedConfig, c3: float,
+                  n_samples: int, d_dim: int, byz_mask: jnp.ndarray):
+    """Convenience: partial + jit."""
+    f = functools.partial(bafdp_round, local_loss=local_loss, fed=fed, c3=c3,
+                          n_samples=n_samples, d_dim=d_dim, byz_mask=byz_mask)
+    return jax.jit(f)

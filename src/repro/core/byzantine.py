@@ -1,0 +1,71 @@
+"""Byzantine attack models (Section III: colluding clients sending
+arbitrary malicious messages; identity unknown to the server).
+
+Each attack maps the honest message a client *would* send to the corrupted
+one.  ``apply_attack`` operates on stacked client pytrees (leading client
+axis C) given a boolean mask of malicious clients — this is what the server
+sees in Eq. (20)'s sign sum.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+ATTACKS = ("none", "gaussian", "sign_flip", "same_value", "scaled",
+           "zero", "label_flip", "alie")
+
+
+def _tree_map2(f, a, b):
+    return jax.tree.map(f, a, b)
+
+
+def corrupt(attack: str, key, honest: Any, *, scale: float = 10.0) -> Any:
+    """Corrupted version of a stacked client message (leading axis C)."""
+    if attack in ("none", "label_flip"):
+        # label_flip corrupts the data, not the message; message unchanged.
+        return honest
+    if attack == "gaussian":
+        keys = iter(jax.random.split(key, len(jax.tree.leaves(honest))))
+        return jax.tree.map(
+            lambda l: jax.random.normal(next(keys), l.shape, jnp.float32)
+            .astype(l.dtype) * scale, honest)
+    if attack == "sign_flip":
+        return jax.tree.map(lambda l: -scale * l, honest)
+    if attack == "same_value":
+        return jax.tree.map(lambda l: jnp.full_like(l, scale), honest)
+    if attack == "scaled":
+        return jax.tree.map(lambda l: scale * l, honest)
+    if attack == "zero":
+        return jax.tree.map(jnp.zeros_like, honest)
+    if attack == "alie":
+        # "A Little Is Enough": shift by a small multiple of the cross-client
+        # std so the outlier hides inside the honest spread.
+        def f(l):
+            mu = jnp.mean(l, axis=0, keepdims=True)
+            sd = jnp.std(l, axis=0, keepdims=True)
+            return jnp.broadcast_to(mu - 1.5 * sd, l.shape).astype(l.dtype)
+        return jax.tree.map(f, honest)
+    raise ValueError(f"unknown attack {attack!r}")
+
+
+def apply_attack(attack: str, key, stacked: Any, byz_mask: jnp.ndarray) -> Any:
+    """Replace malicious clients' messages. stacked leaves: (C, ...);
+    byz_mask: (C,) bool."""
+    if attack == "none" or not bool(byz_mask.shape[0]):
+        return stacked
+    bad = corrupt(attack, key, stacked)
+
+    def sel(h, b):
+        m = byz_mask.reshape((-1,) + (1,) * (h.ndim - 1))
+        return jnp.where(m, b, h)
+
+    return _tree_map2(sel, stacked, bad)
+
+
+def byz_mask(n_clients: int, n_byzantine: int) -> jnp.ndarray:
+    """Deterministic mask: the last ``n_byzantine`` clients are malicious
+    (identity unknown to the *server*, fixed for the experimenter)."""
+    idx = jnp.arange(n_clients)
+    return idx >= (n_clients - n_byzantine)

@@ -1,0 +1,75 @@
+"""Distributionally robust optimization pieces (Section IV-A).
+
+* Wasserstein-ball radius ``rho_i^t = eta_i + sigma_{i,t}`` (Eq. 7), with
+  ``eta_i`` from the Fournier-Guillin measure-concentration rate (Eq. 8).
+* Lipschitz-constant surrogates ``G(omega)`` used as the DRO regularizer
+  (Prop. 1 turns the sup over the ball into ``+ rho * G(omega)``):
+  - ``spectral``: product of per-matrix spectral norms (power iteration) —
+    the standard global bound for MLPs, used for the paper's predictor;
+  - ``frobenius``: sum of Frobenius norms — the tractable surrogate for
+    billion-parameter archs (documented deviation, DESIGN.md Section 6).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core.privacy import sigma_for_eps
+
+# Fournier-Guillin constants (depend only on beta, d; Eq. 8 says "two positive
+# values" — we fix the conventional choice).
+C1 = 2.0
+C2 = 1.0
+
+
+def eta_radius(n_samples: int, d: int, fed: FedConfig) -> float:
+    """eta_i of Eq. (8): concentration radius at confidence 1-gamma."""
+    log_term = math.log(C1 / fed.confidence_gamma)
+    if n_samples >= log_term / C2:
+        expo = 1.0 / max(d, 2)
+    else:
+        expo = 1.0 / fed.wasserstein_beta
+    return (log_term / (C2 * n_samples)) ** expo
+
+
+def rho(eps, n_samples: int, d: int, c3: float, fed: FedConfig):
+    """rho_i^t = eta_i + sigma_{i,t}   (Eq. 7)."""
+    return eta_radius(n_samples, d, fed) + sigma_for_eps(eps, c3)
+
+
+# ---------------------------------------------------------------------------
+# Lipschitz surrogates
+def _spectral_norm(w: jnp.ndarray, iters: int = 4) -> jnp.ndarray:
+    """Power-iteration estimate of ||W||_2 for a 2-D matrix (fp32)."""
+    w = w.astype(jnp.float32)
+    v = jnp.full((w.shape[1],), 1.0 / math.sqrt(w.shape[1]), jnp.float32)
+    for _ in range(iters):
+        u = w @ v
+        u = u / jnp.maximum(jnp.linalg.norm(u), 1e-9)
+        v = w.T @ u
+        v = v / jnp.maximum(jnp.linalg.norm(v), 1e-9)
+    return jnp.dot(u, w @ v)
+
+
+def lipschitz_surrogate(params: Any, kind: str = "spectral") -> jnp.ndarray:
+    """G(omega): differentiable Lipschitz-constant surrogate of a pytree."""
+    leaves = [l for l in jax.tree.leaves(params) if l.ndim >= 1]
+    if kind == "frobenius":
+        total = jnp.zeros((), jnp.float32)
+        for l in leaves:
+            # eps-smoothed: grad(||l||) at l == 0 is NaN (zero-init gate
+            # biases), sqrt(sum^2 + eps) is differentiable everywhere
+            sq = jnp.sum(jnp.square(l.astype(jnp.float32)))
+            total = total + jnp.sqrt(sq + 1e-12)
+        return total / max(len(leaves), 1)
+    # spectral: product over weight matrices (log-sum for stability)
+    log_prod = jnp.zeros((), jnp.float32)
+    for l in leaves:
+        if l.ndim == 2:
+            s = _spectral_norm(l)
+            log_prod = log_prod + jnp.log(jnp.maximum(s, 1e-6))
+    return jnp.exp(jnp.clip(log_prod, -20.0, 20.0))

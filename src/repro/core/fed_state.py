@@ -1,0 +1,56 @@
+"""Federated training state (a single pytree so it pjit-shards cleanly).
+
+Every per-client quantity carries a leading client axis ``C`` — on the mesh
+this axis is sharded over the federated axis (``"data"`` in mode A, ``"pod"``
+in mode B; DESIGN.md Section 3).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+
+
+class FedState(NamedTuple):
+    W: Any                 # stacked client params, leaves (C, ...)
+    z: Any                 # consensus params, leaves (...)
+    z_local: Any           # per-client last-received consensus (C, ...)
+    phi: Any               # equality dual, leaves (C, ...)
+    lam: jnp.ndarray       # (C,) inequality dual (eps <= a)
+    eps: jnp.ndarray       # (C,) privacy levels
+    t: jnp.ndarray         # scalar round counter
+    opt: Any               # optional optimizer state for W (adam m, v)
+
+
+def init_fed_state(key, init_params: Callable[[Any], Any],
+                   fed: FedConfig, n_clients: Optional[int] = None) -> FedState:
+    """``init_params(key) -> params`` builds one client's model."""
+    C = n_clients or fed.n_clients
+    keys = jax.random.split(key, C)
+    W = jax.vmap(init_params)(keys)
+    z = jax.tree.map(lambda l: l[0], W)
+    z_local = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (C,) + l.shape), z)
+    phi = jax.tree.map(jnp.zeros_like, W)
+    lam = jnp.zeros((C,), jnp.float32)
+    eps = jnp.full((C,), max(fed.privacy_budget_a * fed.eps_init_frac,
+                         fed.eps_min), jnp.float32)
+    opt = None
+    if fed.omega_optimizer == "adam":
+        opt = {"m": jax.tree.map(jnp.zeros_like, W),
+               "v": jax.tree.map(jnp.zeros_like, W),
+               "count": jnp.zeros((C,), jnp.int32)}
+    return FedState(W=W, z=z, z_local=z_local, phi=phi, lam=lam, eps=eps,
+                    t=jnp.zeros((), jnp.int32), opt=opt)
+
+
+def consensus_gap(state: FedState) -> jnp.ndarray:
+    """mean_i ||z - w_i||^2 / D — convergence diagnostic."""
+    sq, n = jnp.zeros(()), 0
+    for z_l, w_l in zip(jax.tree.leaves(state.z), jax.tree.leaves(state.W)):
+        diff = z_l[None].astype(jnp.float32) - w_l.astype(jnp.float32)
+        sq = sq + jnp.sum(diff ** 2) / w_l.shape[0]
+        n += z_l.size
+    return sq / float(max(n, 1))   # float: n can exceed int32 (3B+ params)

@@ -1,0 +1,61 @@
+"""Local differential privacy: the Gaussian mechanism of Section III-B.
+
+The paper perturbs *inputs* (input-level LDP, Fig. 1): each client adds
+``v_i^t ~ N(0, sigma_{i,t}^2)`` to its training samples, with
+``sigma_{i,t} = c3 / eps_i^t`` and ``c3 = sqrt(2 d log(1.25/delta)) * Delta``
+(Theorem 1 of Farokhi 2022, ref [64]).  The privacy level ``eps_i^t`` is a
+*decision variable* of the optimization (Eq. 15), constrained to
+``eps_i^t <= a`` (Eq. 3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+
+
+def gaussian_c3(d: int, delta: float, sensitivity: float) -> float:
+    """c3 = sqrt(2 d log(1.25/delta)) * Delta."""
+    return math.sqrt(2.0 * d * math.log(1.25 / delta)) * sensitivity
+
+
+def sigma_for_eps(eps, c3: float):
+    """Gaussian-mechanism noise scale for privacy level eps (Eq. after (8))."""
+    return c3 / jnp.maximum(eps, 1e-6)
+
+
+def perturb_inputs(key, x: jnp.ndarray, eps, c3: float) -> jnp.ndarray:
+    """x_tilde = x + v,  v ~ N(0, sigma^2 I).  ``eps`` broadcasts over the
+    leading (client) axes of ``x``."""
+    sigma = jnp.asarray(sigma_for_eps(eps, c3), x.dtype)
+    noise = jax.random.normal(key, x.shape, dtype=x.dtype)
+    # sigma may carry leading client axes; broadcast from the left.
+    while sigma.ndim < x.ndim:
+        sigma = sigma[..., None]
+    return x + noise * sigma
+
+
+def eps_feasible(eps, fed: FedConfig):
+    """Project eps onto the feasible set [eps_min, a] (constraint Eq. 3)."""
+    return jnp.clip(eps, fed.eps_min, fed.privacy_budget_a)
+
+
+def privacy_accountant(eps_history: jnp.ndarray, delta: float
+                       ) -> Tuple[float, float]:
+    """Basic + advanced composition over T rounds of per-round (eps_t, delta).
+
+    Returns (basic_eps, advanced_eps) for total delta' = T*delta + delta.
+    Advanced composition (Dwork-Roth Thm 3.20):
+        eps_total = sqrt(2 T ln(1/delta)) * eps_max + T eps_max (e^eps_max - 1)
+    evaluated conservatively at eps_max = max_t eps_t.
+    """
+    t = eps_history.shape[0]
+    basic = float(jnp.sum(eps_history))
+    emax = float(jnp.max(eps_history))
+    adv = math.sqrt(2 * t * math.log(1 / delta)) * emax \
+        + t * emax * (math.exp(emax) - 1)
+    return basic, min(basic, adv)

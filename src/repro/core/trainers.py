@@ -1,0 +1,169 @@
+"""Federated baseline trainers (Section V-B): FedGRU / Fed-NTP (FedAvg),
+FedProx, FedAtt, FedDA, AFL, ASPIRE-EASE (simplified), UDP, NbAFL, RSA,
+DP-RSA — all as round functions over stacked client pytrees, sharing one
+local-update kernel so comparisons are apples-to-apples.
+
+Each trainer:  round(server_state, batch, key) -> (server_state, metrics)
+with batch leaves (C, b, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core import aggregators as agg
+from repro.core import byzantine as byz_lib
+from repro.core.bafdp import active_mask
+
+# loss(params, batch_i, key) -> scalar
+Loss = Callable[[Any, Any, jnp.ndarray], jnp.ndarray]
+
+
+# server state is a plain dict (JAX pytree): {"server": params, ...extras}
+BaselineState = dict
+
+
+def _local_sgd(loss: Loss, params, batch_i, key, lr: float, steps: int,
+               prox: float = 0.0, anchor=None):
+    def one(carry, k):
+        p = carry
+        g = jax.grad(loss)(p, batch_i, k)
+        if prox and anchor is not None:
+            g = jax.tree.map(
+                lambda gl, pl, al: gl + prox * (pl.astype(jnp.float32)
+                                                - al.astype(jnp.float32)),
+                g, p, anchor)
+        p = jax.tree.map(lambda pl, gl: (pl.astype(jnp.float32)
+                                         - lr * gl).astype(pl.dtype), p, g)
+        return p, None
+
+    keys = jax.random.split(key, steps)
+    params, _ = jax.lax.scan(one, params, keys)
+    return params
+
+
+def _broadcast(server, C: int):
+    return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (C,) + l.shape), server)
+
+
+@dataclasses.dataclass
+class BaselineTrainer:
+    """Config-driven baseline round."""
+    method: str
+    loss: Loss
+    fed: FedConfig
+    lr: float = 1e-2
+    local_steps: int = 5
+    prox_mu: float = 0.1          # FedProx
+    dp_sigma: float = 0.0         # UDP / NbAFL / DP-RSA noise scale
+    psi: float = 5e-3             # RSA penalty
+    aggregator: str = "fedavg"
+
+    def init(self, params) -> BaselineState:
+        st = {"server": params, "t": jnp.zeros((), jnp.int32)}
+        if self.method == "afl" or self.method == "aspire":
+            st["p"] = jnp.full((self.fed.n_clients,),
+                               1.0 / self.fed.n_clients)
+        if self.method == "fedda":
+            st["quasi"] = params
+        return st
+
+    def round(self, st: BaselineState, batch, key
+              ) -> Tuple[BaselineState, Dict[str, jnp.ndarray]]:
+        fed = self.fed
+        C = fed.n_clients
+        k_act, k_loc, k_byz, k_dp = jax.random.split(key, 4)
+        act = active_mask(k_act, C, fed.active_frac)
+        byz = byz_lib.byz_mask(C, fed.n_byzantine)
+
+        server = st["server"]
+        W0 = _broadcast(server, C)
+        loc_keys = jax.random.split(k_loc, C)
+
+        def local(p0, b_i, k):
+            return _local_sgd(self.loss, p0, b_i, k, self.lr,
+                              self.local_steps,
+                              prox=self.prox_mu if self.method == "fedprox" else 0.0,
+                              anchor=p0 if self.method == "fedprox" else None)
+
+        W1 = jax.vmap(local)(W0, batch, loc_keys)
+        # inactive clients return nothing; reuse server params for them
+        W1 = jax.tree.map(
+            lambda n, o: jnp.where(act.reshape((-1,) + (1,) * (n.ndim - 1)),
+                                   n.astype(jnp.float32),
+                                   o.astype(jnp.float32)).astype(o.dtype),
+            W1, W0)
+
+        # client-side DP noise on uploads (UDP / NbAFL / DP-RSA)
+        if self.dp_sigma > 0:
+            nk = iter(jax.random.split(k_dp, len(jax.tree.leaves(W1))))
+            W1 = jax.tree.map(
+                lambda l: l + self.dp_sigma
+                * jax.random.normal(next(nk), l.shape, jnp.float32)
+                .astype(l.dtype), W1)
+
+        W_sent = byz_lib.apply_attack(fed.attack, k_byz, W1, byz)
+
+        losses = jax.vmap(lambda p, b, k: self.loss(p, b, k))(
+            W1, batch, jax.random.split(key, C))
+        metrics = {"loss": jnp.mean(losses)}
+        new = dict(st)
+
+        m = self.method
+        if m in ("fedavg", "fedprox", "udp", "nbafl"):
+            new["server"] = agg.AGGREGATORS[self.aggregator](W_sent) \
+                if self.aggregator != "krum" else agg.krum(W_sent, fed.n_byzantine)
+            if m == "nbafl":  # downlink perturbation as well
+                nk = iter(jax.random.split(jax.random.fold_in(k_dp, 1),
+                                           len(jax.tree.leaves(new["server"]))))
+                new["server"] = jax.tree.map(
+                    lambda l: l + 0.5 * self.dp_sigma
+                    * jax.random.normal(next(nk), l.shape, jnp.float32)
+                    .astype(l.dtype), new["server"])
+        elif m == "robust_agg":
+            f = agg.AGGREGATORS[self.aggregator]
+            if self.aggregator == "krum":
+                new["server"] = agg.krum(W_sent, fed.n_byzantine)
+            elif self.aggregator == "centered_clip":
+                new["server"] = agg.centered_clip(W_sent, server)
+            else:
+                new["server"] = f(W_sent)
+        elif m == "fedatt":
+            new["server"] = agg.fedatt(W_sent, server)
+        elif m == "fedda":
+            new["server"] = agg.fedda(W_sent, server, st["quasi"])
+            new["quasi"] = jax.tree.map(
+                lambda q, s: (0.9 * q.astype(jnp.float32)
+                              + 0.1 * s.astype(jnp.float32)).astype(q.dtype),
+                st["quasi"], new["server"])
+        elif m in ("afl", "aspire"):
+            # agnostic / DRO weights: exponentiated-gradient ascent on the
+            # per-client losses; ASPIRE-EASE additionally pins p inside a
+            # D-norm box around the uniform prior (its EASE constraint).
+            p = st["p"] * jnp.exp(0.5 * (losses - losses.mean()))
+            p = p / jnp.sum(p)
+            if m == "aspire":
+                u = 1.0 / C
+                p = jnp.clip(p, u * 0.25, u * 4.0)
+                p = p / jnp.sum(p)
+            new["p"] = p
+            new["server"] = agg.fedavg(W_sent, weights=p)
+        elif m in ("rsa", "dp_rsa"):
+            # RSA moves z toward clients: z <- z - lr * psi * sum sign(z - w)
+            sgn = agg.rsa_sign(W_sent, server)
+            new["server"] = jax.tree.map(
+                lambda s, g: (s.astype(jnp.float32)
+                              - self.lr * self.psi * g).astype(s.dtype),
+                server, sgn)
+        else:
+            raise ValueError(m)
+        new["t"] = st["t"] + 1
+        return new, metrics
+
+    def jitted_round(self):
+        return jax.jit(self.round)

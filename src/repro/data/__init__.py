@@ -1,0 +1,2 @@
+from repro.data.synthetic_traffic import DATASETS, make_dataset  # noqa: F401
+from repro.data.windowing import build_windows, FeatureScaler  # noqa: F401

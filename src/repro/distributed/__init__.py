@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingPlan, make_plan, named, greedy_spec)

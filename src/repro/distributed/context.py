@@ -1,0 +1,24 @@
+"""Ambient mesh registry: launch code registers the active mesh so model
+code can use explicit shard_map paths (sequence-parallel attention) without
+threading a Mesh object through every call."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def clear_mesh() -> None:
+    global _MESH
+    _MESH = None

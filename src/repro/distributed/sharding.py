@@ -1,0 +1,212 @@
+"""Logical-to-physical sharding rules (DESIGN.md Section 3).
+
+Mesh axes: ("data", "model") single pod, ("pod", "data", "model") multi-pod.
+
+* Federated axis: mode A -> clients sharded over ("pod","data") (or just
+  "data" single-pod); mode B -> pod silos (client axis = "pod").
+* Model params: name-guided greedy placement — "model" goes to the
+  preferred dim if divisible (experts / d_ff / vocab / head dims), else to
+  the largest divisible dim, else replicated (heads like 15 or 25 simply do
+  not divide 16 — GSPMD keeps those dims replicated and the roofline table
+  shows the cost).  Mode B additionally places "data" on a second dim
+  (FSDP/ZeRO-style; XLA inserts the per-layer all-gathers).
+* Scan-stacked block params carry a leading layer-group dim that is never
+  sharded; FedState leaves carry the leading client dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, FedConfig
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return math.prod(_axis_size(mesh, n) for n in name)
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _place(spec: list, shape: Sequence[int], axis, size: int,
+           preferred: Sequence[int]) -> None:
+    """Greedy: put ``axis`` on the first preferred dim that divides."""
+    for i in preferred:
+        if i < len(shape) and spec[i] is None and shape[i] % size == 0 \
+                and shape[i] >= size:
+            spec[i] = axis
+            return
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def greedy_spec(path_s: str, shape: Tuple[int, ...], mesh: Mesh, *,
+                skip: int, fsdp: bool) -> P:
+    """Spec for one param leaf; ``skip`` leading dims stay unsharded."""
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    body = list(range(skip, ndim))
+    if not body:
+        return P(*spec)
+    by_size = sorted(body, key=lambda i: -shape[i])
+    model_size = _axis_size(mesh, "model")
+
+    name = path_s.rsplit("/", 1)[-1]
+    pref: list = []
+    if name in ("w_gate", "w_up") and ndim - skip == 3:       # moe (E, d, f)
+        pref = [body[0], body[2], body[1]]                    # experts, f, d
+    elif name == "w_down" and ndim - skip == 3:               # moe (E, f, d)
+        pref = [body[0], body[1], body[2]]
+    elif name == "tok":                                       # (vocab, d)
+        pref = [body[0], body[1]]
+    elif name in ("head",):                                   # (d, vocab)
+        pref = [body[-1]] + body[:-1]
+    elif name in ("wo", "w_down", "w_out", "out_proj", "down_proj"):
+        pref = [body[0]] + body[1:]                           # row-parallel
+    elif name in ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "up_proj",
+                  "in_proj"):
+        pref = [body[-1]] + body[:-1]                         # col-parallel
+    pref = pref + by_size
+    _place(spec, shape, "model", model_size, pref)
+
+    if fsdp:
+        data_size = _axis_size(mesh, "data")
+        rest = [i for i in by_size if spec[i] is None]
+        _place(spec, shape, "data", data_size, rest)
+    return P(*spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh
+    cfg: ArchConfig
+    fed_axis: Any                  # "data" | ("pod","data") | "pod" | None
+    n_clients: int
+    fsdp: bool                     # shard params over "data" too (mode B)
+    # hillclimb option: mode A with per-client params REPLICATED over
+    # "model" and the per-client batch data-parallel over "model" instead
+    # of tensor-parallel — kills the per-layer TP all-reduces when one
+    # client's weights fit a chip (smollm: 1.45 GB).
+    inner_dp: bool = False
+
+    # ------------------------------------------------------------------
+    def param_spec_tree(self, params_shape: Any, client_dim: bool = False):
+        """PartitionSpec tree for model params (or stacked client params)."""
+        def leaf_spec(path, leaf):
+            path_s = _path_str(path)
+            head = path_s.split("/")[0]
+            skip = 1 if head in ("unit", "enc_unit") else 0   # scan dim
+            skip += int(client_dim)                           # client dim
+            if self.inner_dp:
+                spec = [None] * leaf.ndim                     # replicated
+            else:
+                spec = list(greedy_spec(path_s, leaf.shape, self.mesh,
+                                        skip=skip, fsdp=self.fsdp))
+            if client_dim:
+                spec[0] = self.fed_axis
+            return P(*spec)
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+    def fed_state_specs(self, state_shape) -> Any:
+        """Spec tree matching a FedState of this arch."""
+        from repro.core.fed_state import FedState
+        W = self.param_spec_tree(state_shape.W, client_dim=True)
+        z = self.param_spec_tree(state_shape.z, client_dim=False)
+        z_local = self.param_spec_tree(state_shape.z_local, client_dim=True)
+        phi = self.param_spec_tree(state_shape.phi, client_dim=True)
+        vec = P(self.fed_axis)
+        opt = None
+        if state_shape.opt is not None:
+            opt = {"m": self.param_spec_tree(state_shape.opt["m"],
+                                             client_dim=True),
+                   "v": self.param_spec_tree(state_shape.opt["v"],
+                                             client_dim=True),
+                   "count": vec}
+        return FedState(W=W, z=z, z_local=z_local, phi=phi, lam=vec, eps=vec,
+                        t=P(), opt=opt)
+
+    # ------------------------------------------------------------------
+    def batch_spec(self, leaf_shape: Tuple[int, ...]) -> P:
+        """(C, b, S, ...) batches: clients on fed axis, b over 'data' in
+        mode B (fed axis 'pod'), b over 'model' in inner-DP mode A (when
+        divisible — multi-pod mode A halves b below the axis size)."""
+        spec: list = [None] * len(leaf_shape)
+        spec[0] = self.fed_axis
+        if self.fsdp and len(leaf_shape) >= 2:
+            spec[1] = "data"
+        elif self.inner_dp and len(leaf_shape) >= 2:
+            model = _axis_size(self.mesh, "model")
+            if leaf_shape[1] % model == 0 and leaf_shape[1] >= model:
+                spec[1] = "model"
+            elif len(leaf_shape) >= 3 and leaf_shape[2] % model == 0:
+                spec[2] = "model"      # fall back to sequence sharding
+        return P(*spec)
+
+    def batch_spec_tree(self, batch_shape: Any) -> Any:
+        return jax.tree.map(lambda l: self.batch_spec(l.shape), batch_shape)
+
+    # ------------------------------------------------------------------
+    def decode_state_specs(self, state_shape: Any, batch: int) -> Any:
+        """Serve-time state: no fed axis. Batch dim -> 'data' (+'pod');
+        if batch == 1 (long_500k) the cache length dim takes 'data'."""
+        data_ax = ("pod", "data") if "pod" in self.mesh.axis_names else "data"
+        data_size = _axis_size(self.mesh, data_ax)
+        model_size = _axis_size(self.mesh, "model")
+
+        def leaf_spec(path, leaf):
+            shape = leaf.shape
+            spec: list = [None] * leaf.ndim
+            if _path_str(path).endswith("memory"):
+                # (B, F, d): encoder memory
+                if shape[0] % data_size == 0 and shape[0] >= data_size:
+                    spec[0] = data_ax
+                return P(*spec)
+            # stacked (n_groups, B, ...) leaves
+            if leaf.ndim >= 2 and shape[1] == batch:
+                bdim = 1
+            else:
+                bdim = None
+            if bdim is not None and shape[bdim] % data_size == 0 \
+                    and shape[bdim] >= data_size:
+                spec[bdim] = data_ax
+                start = bdim + 1
+            elif leaf.ndim >= 3:
+                # batch too small (long_500k): shard the longest later dim
+                start = 2
+                body = sorted(range(2, leaf.ndim), key=lambda i: -shape[i])
+                _place(spec, shape, data_ax, data_size, body)
+            else:
+                start = leaf.ndim
+            body = [i for i in range(2, leaf.ndim) if spec[i] is None]
+            body = sorted(body, key=lambda i: -shape[i])
+            _place(spec, shape, "model", model_size, body)
+            return P(*spec)
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, state_shape)
+
+
+def make_plan(cfg: ArchConfig, mesh: Mesh,
+              inner_dp: bool = False) -> ShardingPlan:
+    names = mesh.axis_names
+    if cfg.fed_mode == "A":
+        fed_axis: Any = ("pod", "data") if "pod" in names else "data"
+        fsdp = False
+    else:
+        fed_axis = "pod" if "pod" in names else None
+        fsdp = True
+        inner_dp = False            # mode B params never fit a chip
+    C = _axis_size(mesh, fed_axis) if fed_axis else 1
+    return ShardingPlan(mesh=mesh, cfg=cfg, fed_axis=fed_axis,
+                        n_clients=max(C, 1), fsdp=fsdp, inner_dp=inner_dp)

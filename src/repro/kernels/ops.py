@@ -1,0 +1,80 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``impl`` selection:
+  * "pallas"  — real TPU lowering (interpret=False);
+  * "interpret" — Pallas interpret mode (CPU correctness testing);
+  * "xla"    — the pure-jnp oracle from ref.py (the dry-run / fallback path);
+  * "auto"   — pallas on TPU, xla elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as dec_k
+from repro.kernels import flash_attention as fa_k
+from repro.kernels import ref
+from repro.kernels import sign_agg as sa_k
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@functools.partial(jax.jit, static_argnames=("psi", "alpha_z", "impl"))
+def sign_agg(z, W, phi_mean, psi: float, alpha_z: float, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.sign_agg_ref(z, W, phi_mean, psi, alpha_z)
+    return sa_k.sign_agg(z, W, phi_mean, psi, alpha_z,
+                         interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "impl", "bq", "bk"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    impl: str = "auto", bq: int = fa_k.DEFAULT_BQ,
+                    bk: int = fa_k.DEFAULT_BK):
+    """q: (B, Sq, H, D), k/v: (B, Sk, Hkv, D) — model layout; transposed to
+    the kernel's (B, H, S, D) layout internally."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    out = fa_k.flash_attention(qT, kT, vT, causal=causal, window=window,
+                               bq=bq, bk=bk,
+                               interpret=(impl == "interpret"))
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "bl"))
+def decode_attention(q, k, v, length, impl: str = "auto",
+                     bl: int = dec_k.DEFAULT_BL):
+    """q: (B, H, D); k/v: (B, L, Hkv, D) — model layout."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.decode_attention_ref(q, k, v, length)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    return dec_k.decode_attention(q, kT, vT, length, bl=bl,
+                                  interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk", "bd"))
+def ssm_scan(a, b, impl: str = "auto", chunk: int = 128, bd: int = 256):
+    impl = _resolve(impl)
+    if impl == "xla":
+        B, S, D, N = a.shape
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+        return ref.ssm_scan_ref(a, b, h0)
+    return ssm_k_scan(a, b, chunk=chunk, bd=bd,
+                      interpret=(impl == "interpret"))
+
+
+from repro.kernels.ssm_scan import ssm_scan as ssm_k_scan  # noqa: E402

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels are tested against (interpret=True
+on CPU; real lowering on TPU).  They are also the XLA fallback path used by
+the model code and the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sign_agg_ref(z: jnp.ndarray, W: jnp.ndarray, phi_mean: jnp.ndarray,
+                 psi: float, alpha_z: float) -> jnp.ndarray:
+    """BAFDP/RSA server update (Eq. 20), flattened form.
+
+    z: (D,) consensus; W: (C, D) stacked client params (already containing
+    any Byzantine corruption); phi_mean: (D,) mean dual.
+    Returns z - alpha_z * (phi_mean + psi * mean_i sign(z - w_i)).
+    """
+    sgn = jnp.sign(z[None, :].astype(jnp.float32) - W.astype(jnp.float32))
+    dz = phi_mean.astype(jnp.float32) + psi * jnp.mean(sgn, axis=0)
+    return (z.astype(jnp.float32) - alpha_z * dz).astype(z.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Plain softmax attention (GQA-aware).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D). Returns (B, Sq, H, D) fp32-safe.
+    """
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, kf)
+    Sk = k.shape[1]
+    qi = jnp.arange(Sq)[:, None] + (Sk - Sq)   # queries end-aligned with keys
+    ki = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= ki <= qi
+    if window:
+        ok &= ki > qi - window
+    logits = jnp.where(ok[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vf)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         length: jnp.ndarray) -> jnp.ndarray:
+    """Single-token attention over a KV cache.
+
+    q: (B, H, D); k, v: (B, L, Hkv, D); length: scalar or (B,) valid length.
+    """
+    B, H, D = q.shape
+    L, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg * scale, k.astype(jnp.float32))
+    length = jnp.broadcast_to(jnp.asarray(length), (B,))
+    valid = jnp.arange(L)[None, :] < length[:, None]            # (B, L)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def ssm_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Diagonal linear recurrence  h_t = a_t * h_{t-1} + b_t.
+
+    a, b: (B, S, D, N); h0: (B, D, N). Returns hs: (B, S, D, N) (fp32).
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (a.transpose(1, 0, 2, 3), b.transpose(1, 0, 2, 3)))
+    return hs.transpose(1, 0, 2, 3)

@@ -1,0 +1,136 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend init, and the production meshes below need 512
+# placeholder host devices (2 pods x 256).
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape), lower + compile the corresponding
+step on the single-pod (16, 16) mesh AND the 2-pod (2, 16, 16) mesh, print
+``memory_analysis()`` / ``cost_analysis()``, and persist the roofline raw
+terms (deliverable g reads these).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+        --shape train_4k [--multi-pod both] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_arch
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import analyze_compiled, model_flops_for
+
+
+def run_one(arch_name: str, shape_name: str, multi_pod: bool,
+            out_dir: str = "results/dryrun", verbose: bool = True,
+            setup_override=None, variant: str = "") -> dict:
+    cfg = get_arch(arch_name)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = int(mesh.devices.size)
+
+    setup_kwargs = {}
+    fed_base = None
+    if variant:
+        from repro.launch.variants import get_variant
+        v = get_variant(variant)
+        cfg, fed_base, setup_kwargs = v.apply(cfg)
+        arch_name = f"{arch_name}+{variant}"
+
+    from repro.distributed.context import set_mesh
+    set_mesh(mesh)
+
+    t0 = time.time()
+    setup = setup_override or steps_lib.input_specs
+    step, args, in_shardings, out_shardings = setup(
+        cfg, shape, mesh, base_fed=fed_base, **setup_kwargs) \
+        if not setup_override else setup(cfg, shape, mesh)
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_shardings,
+                         out_shardings=out_shardings)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    report = analyze_compiled(
+        compiled, arch=arch_name, shape=shape_name, mesh_name=mesh_name,
+        chips=chips, model_flops=model_flops_for(cfg, shape))
+    row = report.row()
+    row.update({
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": {
+            "argument_size_in_bytes": report.argument_bytes,
+            "output_size_in_bytes": report.output_bytes,
+            "temp_size_in_bytes": report.temp_bytes,
+        },
+        "fed_mode": cfg.fed_mode,
+        "kind": shape.kind,
+    })
+    if verbose:
+        print(f"[dryrun] {arch_name} x {shape_name} on {mesh_name}: "
+              f"compile {t_compile:.0f}s")
+        print(f"  memory_analysis: {mem}")
+        print(f"  flops={report.flops:.3e} (xla once-counted "
+              f"{report.xla_flops:.3e})  hbm={report.hbm_bytes:.3e}B  "
+              f"collective={report.collective_bytes:.3e}B")
+        print(f"  terms: compute {report.t_compute*1e3:.2f}ms | memory "
+              f"{report.t_memory*1e3:.2f}ms | collective "
+              f"{report.t_collective*1e3:.2f}ms -> dominant "
+              f"{report.dominant}  useful_ratio={report.useful_flops_ratio:.3f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir,
+                            f"{arch_name}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(row, f, indent=1)
+    return row
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", default="both",
+                    choices=["both", "single", "multi"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--variant", default="",
+                    help="named hillclimb variant (launch/variants.py)")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    pods = {"both": [False, True], "single": [False], "multi": [True]}[
+        args.multi_pod]
+
+    failures = []
+    for a in archs:
+        for s in shapes:
+            for mp in pods:
+                try:
+                    run_one(a, s, mp, out_dir=args.out,
+                            variant=args.variant)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((a, s, mp, repr(e)))
+                    print(f"[dryrun] FAIL {a} x {s} multi_pod={mp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print("\nAll dry-runs compiled successfully.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

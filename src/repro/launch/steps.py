@@ -1,0 +1,230 @@
+"""Step builders: assemble (train_step | prefill_step | serve_step) +
+ShapeDtypeStruct input specs + shardings for an (arch x input-shape x mesh)
+combination.  This is what both the real trainer and the dry-run lower.
+
+* ``train_step`` is a full **BAFDP federated round** over the model zoo:
+  clients on the fed axis (DESIGN.md Section 3), per-client LDP embedding
+  noise, DRO regularizer, L1-consensus sign aggregation, dual updates.
+* ``prefill_step`` / ``serve_step`` lower the deployment (consensus) model.
+
+Everything here is shape-only until the caller feeds real arrays; params
+never materialize during the dry-run (jax.eval_shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, FedConfig, InputShape
+from repro.core import bafdp as bafdp_lib
+from repro.core import byzantine as byz_lib
+from repro.core.fed_state import FedState
+from repro.core.privacy import gaussian_c3
+from repro.distributed.sharding import ShardingPlan, make_plan
+from repro.models import transformer as tr
+from repro.models.layers import dtype_of
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def fed_config_for(cfg: ArchConfig, n_clients: int,
+                   base: Optional[FedConfig] = None) -> FedConfig:
+    """LM-scale BAFDP config: embedding-space sensitivity (Delta ~ the
+    0.02-scale embedding norm) so sigma = c3/eps sits at a useful level."""
+    base = base or FedConfig()
+    sens = 0.05 / math.sqrt(cfg.d_model)
+    return dataclasses.replace(
+        base, n_clients=n_clients, dp_sensitivity=sens,
+        lipschitz_surrogate="frobenius", grad_clip=1.0)
+
+
+def text_len(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.frontend != "none" and cfg.n_enc_layers == 0:
+        return seq_len - cfg.frontend_tokens
+    return seq_len
+
+
+# ===========================================================================
+# train
+# ===========================================================================
+def batch_struct(cfg: ArchConfig, shape: InputShape, n_clients: int
+                 ) -> Dict[str, jax.ShapeDtypeStruct]:
+    C = n_clients
+    b = shape.global_batch // max(C, 1)
+    assert b >= 1, (shape.global_batch, C)
+    st = text_len(cfg, shape.seq_len)
+    cdt = dtype_of(cfg.compute_dtype)
+    out = {"tokens": _sds((C, b, st), jnp.int32),
+           "labels": _sds((C, b, st), jnp.int32)}
+    if cfg.frontend != "none" and cfg.n_enc_layers == 0:
+        out["frontend_embeds"] = _sds((C, b, cfg.frontend_tokens, cfg.d_model),
+                                      cdt)
+    if cfg.n_enc_layers:
+        out["enc_embeds"] = _sds((C, b, cfg.frontend_tokens, cfg.d_model), cdt)
+    return out
+
+
+def fed_state_struct(cfg: ArchConfig, fed: FedConfig) -> FedState:
+    def one_client(key):
+        return tr.init_lm(key, cfg)
+
+    def build(key):
+        from repro.core.fed_state import init_fed_state
+        return init_fed_state(key, one_client, fed)
+
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def make_train_step(cfg: ArchConfig, fed: FedConfig
+                    ) -> Callable[[FedState, Any, jnp.ndarray],
+                                  Tuple[FedState, Dict[str, jnp.ndarray]]]:
+    c3 = gaussian_c3(cfg.d_model, fed.dp_delta, fed.dp_sensitivity)
+    mask = byz_lib.byz_mask(fed.n_clients, fed.n_byzantine)
+
+    def local_loss(params_i, batch_i, key_i, eps_i):
+        from repro.core.privacy import sigma_for_eps
+        sigma = sigma_for_eps(eps_i, c3)
+        return tr.loss_fn(params_i, batch_i, cfg, noise=(key_i, sigma))
+
+    def train_step(state: FedState, batch, seed):
+        key = jax.random.PRNGKey(seed)
+        return bafdp_lib.bafdp_round(
+            state, batch, key, local_loss=local_loss, fed=fed, c3=c3,
+            n_samples=4096, d_dim=cfg.d_model, byz_mask=mask)
+
+    return train_step
+
+
+def train_setup(cfg: ArchConfig, shape: InputShape, mesh,
+                base_fed: Optional[FedConfig] = None,
+                inner_dp: bool = False):
+    """Returns (train_step, arg_structs, in_shardings, out_shardings)."""
+    plan = make_plan(cfg, mesh, inner_dp=inner_dp)
+    fed = fed_config_for(cfg, plan.n_clients, base_fed)
+    step = make_train_step(cfg, fed)
+
+    state_sds = fed_state_struct(cfg, fed)
+    batch_sds = batch_struct(cfg, shape, fed.n_clients)
+
+    state_specs = plan.fed_state_specs(state_sds)
+    batch_specs = plan.batch_spec_tree(batch_sds)
+    in_shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs),
+        NamedSharding(mesh, P()),
+    )
+    out_shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs),
+        NamedSharding(mesh, P()),
+    )
+    args = (state_sds, batch_sds, _sds((), jnp.int32))
+    return step, args, in_shardings, out_shardings
+
+
+# ===========================================================================
+# prefill / decode (deployment model = consensus z)
+# ===========================================================================
+def params_struct(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: tr.init_lm(k, cfg), jax.random.PRNGKey(0))
+
+
+def prefill_inputs_struct(cfg: ArchConfig, shape: InputShape):
+    st = text_len(cfg, shape.seq_len)
+    cdt = dtype_of(cfg.compute_dtype)
+    out = {"tokens": _sds((shape.global_batch, st), jnp.int32)}
+    if cfg.frontend != "none" and cfg.n_enc_layers == 0:
+        out["frontend_embeds"] = _sds(
+            (shape.global_batch, cfg.frontend_tokens, cfg.d_model), cdt)
+    if cfg.n_enc_layers:
+        out["enc_embeds"] = _sds(
+            (shape.global_batch, cfg.frontend_tokens, cfg.d_model), cdt)
+    return out
+
+
+def prefill_setup(cfg: ArchConfig, shape: InputShape, mesh):
+    plan = make_plan(cfg, mesh)
+
+    def prefill_step(params, inputs):
+        x, _ = tr.forward(params, inputs, cfg)
+        # only the final position needs the LM head at prefill time
+        from repro.models.layers import lm_logits
+        return lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+
+    p_sds = params_struct(cfg)
+    in_sds = prefill_inputs_struct(cfg, shape)
+    p_specs = plan.param_spec_tree(p_sds, client_dim=False)
+    data_ax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def in_spec(l):
+        spec = [None] * l.ndim
+        spec[0] = data_ax
+        return P(*spec)
+
+    in_shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs),
+        jax.tree.map(lambda l: NamedSharding(mesh, in_spec(l)), in_sds),
+    )
+    out_shardings = NamedSharding(mesh, P(data_ax, "model"))
+    return prefill_step, (p_sds, in_sds), in_shardings, out_shardings
+
+
+def decode_window(cfg: ArchConfig, shape: InputShape) -> int:
+    """long_500k uses the sliding-window variant on attention archs
+    (DESIGN.md Section 4); other decode shapes use the full cache."""
+    if shape.seq_len > 65536 and cfg.sliding_window:
+        return cfg.sliding_window
+    return 0
+
+
+def decode_setup(cfg: ArchConfig, shape: InputShape, mesh):
+    plan = make_plan(cfg, mesh)
+    window = decode_window(cfg, shape)
+    B = shape.global_batch
+    cdt = dtype_of(cfg.compute_dtype)
+
+    def serve_step(params, state, tokens, step):
+        logits, new_state = tr.decode_step(params, state, tokens, step, cfg,
+                                           window=window)
+        return logits, new_state
+
+    p_sds = params_struct(cfg)
+    state_sds = jax.eval_shape(
+        lambda: tr.init_decode_state(cfg, B, shape.seq_len, cdt,
+                                     window=window))
+    p_specs = plan.param_spec_tree(p_sds, client_dim=False)
+    s_specs = plan.decode_state_specs(state_sds, B)
+    data_ax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    tok_spec = P(data_ax if B > 1 else None, None)
+    in_shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), s_specs),
+        NamedSharding(mesh, tok_spec),
+        NamedSharding(mesh, P()),
+    )
+    out_shardings = (
+        NamedSharding(mesh, P(data_ax if B > 1 else None, None, "model")),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), s_specs),
+    )
+    args = (p_sds, state_sds, _sds((B, 1), jnp.int32), _sds((), jnp.int32))
+    return serve_step, args, in_shardings, out_shardings
+
+
+# ===========================================================================
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh,
+                base_fed: Optional[FedConfig] = None,
+                inner_dp: bool = False):
+    """The deliverable entry point: ShapeDtypeStruct stand-ins + shardings
+    for every model input of this (arch x shape), dispatched on kind."""
+    if shape.kind == "train":
+        return train_setup(cfg, shape, mesh, base_fed, inner_dp=inner_dp)
+    if shape.kind == "prefill":
+        return prefill_setup(cfg, shape, mesh)
+    return decode_setup(cfg, shape, mesh)

@@ -1,0 +1,229 @@
+"""GQA attention: training (causal / sliding-window), decode with KV cache
+(full or ring-buffer window), and encoder-decoder cross-attention.
+
+The math here is the XLA path (and the oracle the Pallas kernels are tested
+against); ``impl='pallas'`` routes the core contraction through
+``repro.kernels.ops`` on TPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, dense_init, dtype_of
+
+NEG_INF = -1e9
+
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False):
+    dt = dtype_of(cfg.param_dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, cfg.n_heads * hd), dtype=dt),
+        "wk": dense_init(k2, (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wv": dense_init(k3, (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wo": dense_init(k4, (cfg.n_heads * hd, d), dtype=dt),
+    }
+
+
+def _project_qkv(params, xq, xkv, cfg: ArchConfig, q_pos, k_pos, use_rope=True):
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("...d,dh->...h", xq, params["wq"].astype(xq.dtype))
+    k = jnp.einsum("...d,dh->...h", xkv, params["wk"].astype(xkv.dtype))
+    v = jnp.einsum("...d,dh->...h", xkv, params["wv"].astype(xkv.dtype))
+    q = q.reshape(q.shape[:-1] + (cfg.n_heads, hd))
+    k = k.reshape(k.shape[:-1] + (cfg.n_kv_heads, hd))
+    v = v.reshape(v.shape[:-1] + (cfg.n_kv_heads, hd))
+    if use_rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, k_pos, cfg.rope_theta)
+    return q, k, v
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         mask: Optional[jnp.ndarray], n_kv_heads: int) -> jnp.ndarray:
+    """Grouped scaled-dot-product attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D); mask: (B, 1, Sq, Sk) additive or None.
+    """
+    B, Sq, H, D = q.shape
+    group = H // n_kv_heads
+    qg = q.reshape(B, Sq, n_kv_heads, group, D)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32)).astype(q.dtype)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k)
+    logits = logits.astype(jnp.float32)
+    if mask is not None:
+        logits = logits + mask[:, :, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def causal_mask(sq: int, sk: int, window: int = 0,
+                offset: int = 0) -> jnp.ndarray:
+    """(1, 1, sq, sk) additive mask. ``offset`` = absolute position of query 0
+    minus position of key 0 (for prefix/cache setups)."""
+    qi = jnp.arange(sq)[:, None] + offset
+    ki = jnp.arange(sk)[None, :]
+    ok = ki <= qi
+    if window:
+        ok &= ki > qi - window
+    return jnp.where(ok, 0.0, NEG_INF)[None, None].astype(jnp.float32)
+
+
+Q_CHUNK = 256          # flash-style query chunking threshold / block
+
+
+def chunked_sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 n_kv_heads: int, *, causal: bool, window: int,
+                 bq: int = Q_CHUNK, seq_shards: int = 0) -> jnp.ndarray:
+    """Query-chunked attention: O(BQ * Sk) live logits instead of O(Sq * Sk).
+
+    This is the XLA analog of the Pallas flash kernel's memory behaviour
+    (the kernel itself additionally chunks K with an online softmax); it is
+    what keeps the 32k-prefill / 4k-train dry-runs memory-sane.
+
+    ``seq_shards`` > 0 enables **sequence-parallel attention** (hillclimb
+    variant): the query-chunk axis is split into ``seq_shards`` spatial
+    shards pinned to the "model" mesh axis, so attention compute partitions
+    16-ways even when the head count (15/25/40...) does not divide the axis
+    — the fix for the replicated-attention waste the roofline exposed
+    (phi3 prefill_32k: useful_ratio 0.008).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    bq = min(bq, Sq)
+    if Sq % bq:
+        # largest divisor of Sq <= bq (e.g. seamless' 1500 frames -> 250)
+        bq = max(d for d in range(1, bq + 1) if Sq % d == 0)
+    n_chunks = Sq // bq
+    qc = q.reshape(B, n_chunks, bq, H, D).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def one(i, q_blk, k, v):
+        offset = i * bq + (Sk - Sq)
+        mask = None
+        if causal or window:
+            mask = causal_mask(bq, Sk, window, offset=offset)
+            # q_blk batch dim may be a local shard inside shard_map
+            mask = jnp.broadcast_to(mask, (q_blk.shape[0], 1, bq, Sk))
+        return sdpa(q_blk, k, v, mask, n_kv_heads)
+
+    idx = jnp.arange(n_chunks)
+    if seq_shards > 1 and n_chunks % seq_shards == 0:
+        out = _seq_par_chunks(one, qc, k, v, n_chunks, seq_shards)
+        if out is not None:
+            return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+    # per-chunk remat: backward recomputes the (BQ, Sk) probs chunk by
+    # chunk instead of storing all of them (38 GB/device at 4k before).
+    out = jax.lax.map(lambda args: one(args[0], args[1], k, v), (idx, qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+
+
+def _seq_par_chunks(one, qc, k, v, n_chunks: int, seq_shards: int):
+    """Explicit shard_map sequence parallelism over the query-chunk axis.
+
+    A first attempt used vmap + with_sharding_constraint and let GSPMD
+    partition — measured result: the constraint was dropped through the
+    scan transpose and compute stayed replicated with 16x the temp memory
+    (EXPERIMENTS Section Perf, refuted iteration).  shard_map makes the
+    placement explicit: each model-axis member owns n_chunks/16 query
+    chunks; k/v arrive replicated over 'model'."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.distributed.context import get_mesh
+
+    mesh = get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    batch_ax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def body(qc_loc, k_loc, v_loc):
+        p = jax.lax.axis_index("model")
+        n_inner = qc_loc.shape[0]
+        ids = p * n_inner + jnp.arange(n_inner)
+        return jax.lax.map(
+            lambda args: one(args[0], args[1], k_loc, v_loc), (ids, qc_loc))
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("model", batch_ax, None, None, None),
+                  P(batch_ax, None, None, None),
+                  P(batch_ax, None, None, None)),
+        out_specs=P("model", batch_ax, None, None, None),
+        check_rep=False)
+    return f(qc, k, v)
+
+
+def self_attention(params, x: jnp.ndarray, cfg: ArchConfig, *,
+                   causal: bool = True, window: int = 0,
+                   positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Training / prefill self-attention. x: (B, S, d)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, x, x, cfg, positions, positions)
+    if S > Q_CHUNK:
+        out = chunked_sdpa(q, k, v, cfg.n_kv_heads, causal=causal,
+                           window=window, seq_shards=cfg.attn_seq_shards)
+    else:
+        mask = causal_mask(S, S, window) if causal else None
+        out = sdpa(q, k, v,
+                   jnp.broadcast_to(mask, (B, 1, S, S))
+                   if mask is not None else None, cfg.n_kv_heads)
+    out = out.reshape(B, S, -1)
+    return jnp.einsum("...h,hd->...d", out, params["wo"].astype(out.dtype))
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                  n_layers: int, dtype) -> Dict[str, jnp.ndarray]:
+    hd = cfg.resolved_head_dim
+    shape = (n_layers, batch, cache_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(params, x: jnp.ndarray, layer_cache, step: jnp.ndarray,
+                     cfg: ArchConfig, *, window: int = 0):
+    """One-token decode. x: (B, 1, d); layer_cache: {'k','v'}: (B, L, kv, hd)
+    where L = cache_len (full) or window (ring buffer). ``step`` = number of
+    tokens already in the cache (absolute position of the new token).
+    Returns (out (B,1,d), new_layer_cache).
+    """
+    B = x.shape[0]
+    L = layer_cache["k"].shape[1]
+    pos = jnp.full((B, 1), step, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, x, cfg, pos, pos)
+    slot = (step % L).astype(jnp.int32) if window else jnp.minimum(step, L - 1)
+    k = jax.lax.dynamic_update_slice(
+        layer_cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        layer_cache["v"], v_new, (0, slot, 0, 0))
+    # validity mask over cache slots
+    idx = jnp.arange(L)
+    if window:
+        valid = idx < jnp.minimum(step + 1, L)       # ring buffer fills up to L
+    else:
+        valid = idx <= jnp.minimum(step, L - 1)
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+    mask = jnp.broadcast_to(mask, (B, 1, 1, L)).astype(jnp.float32)
+    out = sdpa(q, k, v, mask, cfg.n_kv_heads)
+    out = out.reshape(B, 1, -1)
+    out = jnp.einsum("...h,hd->...d", out, params["wo"].astype(out.dtype))
+    return out, {"k": k, "v": v}
+
+
+def cross_attention(params, x: jnp.ndarray, memory: jnp.ndarray,
+                    cfg: ArchConfig) -> jnp.ndarray:
+    """Decoder->encoder attention. x: (B, Sq, d); memory: (B, Sk, d)."""
+    B, Sq, _ = x.shape
+    Sk = memory.shape[1]
+    qpos = jnp.zeros((B, Sq), jnp.int32)
+    kpos = jnp.zeros((B, Sk), jnp.int32)
+    q, k, v = _project_qkv(params, x, memory, cfg, qpos, kpos, use_rope=False)
+    out = sdpa(q, k, v, None, cfg.n_kv_heads)
+    out = out.reshape(B, Sq, -1)
+    return jnp.einsum("...h,hd->...d", out, params["wo"].astype(out.dtype))

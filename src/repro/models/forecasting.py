@@ -1,0 +1,143 @@
+"""The paper's traffic-prediction models (Section V): an MLP over
+closeness + period + metadata + text features (BAFDP's own predictor), plus
+GRU / LSTM backbones used by the FedGRU / Fed-NTP baselines and a small
+attention predictor (FedAtt/FedDA backbone).
+
+All take x: (B, d_x) -> y_hat: (B, H).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.forecast import ForecastConfig
+from repro.models.layers import dense_init
+
+
+def init_forecaster(key, cfg: ForecastConfig):
+    if cfg.model == "mlp":
+        return _init_mlp(key, cfg)
+    if cfg.model in ("gru", "lstm"):
+        return _init_rnn(key, cfg)
+    if cfg.model == "attn":
+        return _init_attn(key, cfg)
+    raise ValueError(cfg.model)
+
+
+def apply_forecaster(params, x: jnp.ndarray, cfg: ForecastConfig) -> jnp.ndarray:
+    if cfg.model == "mlp":
+        return _apply_mlp(params, x)
+    if cfg.model == "gru":
+        return _apply_gru(params, x, cfg)
+    if cfg.model == "lstm":
+        return _apply_lstm(params, x, cfg)
+    if cfg.model == "attn":
+        return _apply_attn(params, x, cfg)
+    raise ValueError(cfg.model)
+
+
+def mse_loss(params, x, y, cfg: ForecastConfig) -> jnp.ndarray:
+    pred = apply_forecaster(params, x, cfg)
+    return jnp.mean(jnp.square(pred - y))
+
+
+# ---------------------------------------------------------------------------
+def _init_mlp(key, cfg: ForecastConfig):
+    dims = (cfg.d_x,) + cfg.hidden + (cfg.d_y,)
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": {"w": dense_init(ks[i], (dims[i], dims[i + 1])),
+                  "b": jnp.zeros((dims[i + 1],))}
+        for i in range(len(dims) - 1)
+    }
+
+
+def _apply_mlp(params, x):
+    n = len(params)
+    for i in range(n):
+        p = params[f"l{i}"]
+        x = x @ p["w"] + p["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+def _init_rnn(key, cfg: ForecastConfig):
+    h = cfg.rnn_hidden
+    gate_mult = 3 if cfg.model == "gru" else 4
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "w_x": dense_init(k1, (1, gate_mult * h)),
+        "w_h": dense_init(k2, (h, gate_mult * h)),
+        "b": jnp.zeros((gate_mult * h,)),
+        "w_meta": dense_init(k3, (cfg.n_meta + cfg.n_text, h)),
+        "w_out": {"w": dense_init(k4, (h, cfg.d_y)), "b": jnp.zeros((cfg.d_y,))},
+    }
+
+
+def _series_and_meta(x, cfg: ForecastConfig):
+    s = cfg.closeness_len + cfg.period_len
+    return x[:, :s, None], x[:, s:]          # (B, S, 1), (B, meta)
+
+
+def _apply_gru(params, x, cfg: ForecastConfig):
+    series, meta = _series_and_meta(x, cfg)
+    h0 = jnp.tanh(meta @ params["w_meta"])
+    hdim = h0.shape[-1]
+
+    def step(h, xt):
+        gates = xt @ params["w_x"] + h @ params["w_h"] + params["b"]
+        r, z, n = jnp.split(gates, 3, axis=-1)
+        r, z = jax.nn.sigmoid(r), jax.nn.sigmoid(z)
+        n = jnp.tanh(n[:, :hdim] + r * (h @ params["w_h"][:, 2 * hdim:]))
+        h = (1 - z) * n + z * h
+        return h, None
+
+    h, _ = jax.lax.scan(step, h0, series.transpose(1, 0, 2))
+    return h @ params["w_out"]["w"] + params["w_out"]["b"]
+
+
+def _apply_lstm(params, x, cfg: ForecastConfig):
+    series, meta = _series_and_meta(x, cfg)
+    h0 = jnp.tanh(meta @ params["w_meta"])
+    c0 = jnp.zeros_like(h0)
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ params["w_x"] + h @ params["w_h"] + params["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0), jax.nn.sigmoid(o)
+        c = f * c + i * jnp.tanh(g)
+        h = o * jnp.tanh(c)
+        return (h, c), None
+
+    (h, _), _ = jax.lax.scan(step, (h0, c0), series.transpose(1, 0, 2))
+    return h @ params["w_out"]["w"] + params["w_out"]["b"]
+
+
+# ---------------------------------------------------------------------------
+def _init_attn(key, cfg: ForecastConfig):
+    h = cfg.rnn_hidden
+    ks = jax.random.split(key, 5)
+    return {
+        "w_emb": dense_init(ks[0], (1, h)),
+        "w_q": dense_init(ks[1], (cfg.n_meta + cfg.n_text, h)),
+        "w_k": dense_init(ks[2], (h, h)),
+        "w_v": dense_init(ks[3], (h, h)),
+        "w_out": {"w": dense_init(ks[4], (h, cfg.d_y)), "b": jnp.zeros((cfg.d_y,))},
+    }
+
+
+def _apply_attn(params, x, cfg: ForecastConfig):
+    series, meta = _series_and_meta(x, cfg)
+    e = jnp.tanh(series @ params["w_emb"])                     # (B, S, h)
+    q = (meta @ params["w_q"])[:, None, :]                     # (B, 1, h)
+    k = e @ params["w_k"]
+    v = e @ params["w_v"]
+    scores = jax.nn.softmax(
+        jnp.einsum("bqh,bsh->bqs", q, k) / jnp.sqrt(1.0 * k.shape[-1]), axis=-1)
+    ctx = jnp.einsum("bqs,bsh->bqh", scores, v)[:, 0]
+    return ctx @ params["w_out"]["w"] + params["w_out"]["b"]

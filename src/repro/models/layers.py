@@ -1,0 +1,168 @@
+"""Shared layers: norms, RoPE, embeddings, dense FFN variants.
+
+Everything is functional pure-JAX: ``init_*`` builds a param pytree (nested
+dicts of jnp arrays), ``apply``-style functions consume it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, in_axis: int = 0, scale: float = 1.0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[in_axis]
+    std = scale / math.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    orig = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+def init_embedding(key, cfg: ArchConfig):
+    dt = dtype_of(cfg.param_dtype)
+    p = {"tok": dense_init(key, (cfg.padded_vocab, cfg.d_model), in_axis=1, dtype=dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(jax.random.fold_in(key, 1),
+                               (cfg.d_model, cfg.padded_vocab), dtype=dt)
+    return p
+
+
+def embed(params, tokens: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    x = jnp.take(params["tok"], tokens, axis=0)
+    if cfg.name.startswith("gemma"):          # gemma scales embeddings
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x.astype(dtype_of(cfg.compute_dtype))
+
+
+def lm_logits(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    w = params["tok"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (SwiGLU / GeGLU / GELU)
+def init_ffn(key, cfg: ArchConfig):
+    dt = dtype_of(cfg.param_dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(k1, (d, f), dtype=dt),
+                "w_up": dense_init(k2, (d, f), dtype=dt),
+                "w_down": dense_init(k3, (f, d), dtype=dt)}
+    return {"w_in": dense_init(k1, (d, f), dtype=dt),
+            "w_out": dense_init(k2, (f, d), dtype=dt)}
+
+
+def ffn(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+        u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+        act = jax.nn.silu(g) if cfg.ffn_act == "swiglu" else jax.nn.gelu(g)
+        return jnp.einsum("...f,fd->...d", act * u, params["w_down"].astype(x.dtype))
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["w_in"].astype(x.dtype)))
+    return jnp.einsum("...f,fd->...d", h, params["w_out"].astype(x.dtype))
+
+
+def chunked_ce_from_hidden(embed_params, x: jnp.ndarray, labels: jnp.ndarray,
+                           cfg: ArchConfig, chunk: int = 512) -> jnp.ndarray:
+    """Next-token CE with the LM head applied per sequence chunk, so the
+    (B, S, V) logits never materialize in HBM — the memory fix the first
+    dry-run exposed (12.9 GB/device of logits for smollm train_4k).
+
+    x: (B, S, d) final hidden states; labels: (B, S)."""
+    B, S, _ = x.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        S = S + pad
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, x.shape[-1]).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        nll_sum, count = carry
+        xb, lb = inp
+        logits = lm_logits(embed_params, xb, cfg)
+        nll, cnt = _ce_terms(logits, lb, cfg.vocab_size)
+        return (nll_sum + nll, count + cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def _ce_terms(logits: jnp.ndarray, labels: jnp.ndarray, vocab_size: int):
+    logits = logits.astype(jnp.float32)
+    pv = logits.shape[-1]
+    if pv > vocab_size:
+        neg = jnp.concatenate([jnp.zeros((vocab_size,), jnp.float32),
+                               jnp.full((pv - vocab_size,), -1e9)])
+        logits = logits + neg
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * valid
+    return jnp.sum(nll), jnp.sum(valid).astype(jnp.float32)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab_size: int) -> jnp.ndarray:
+    """Mean next-token CE, masking the padded vocab tail and label==-1."""
+    logits = logits.astype(jnp.float32)
+    pv = logits.shape[-1]
+    if pv > vocab_size:
+        neg = jnp.full((pv - vocab_size,), -1e9, dtype=jnp.float32)
+        logits = logits.at[..., vocab_size:].add(neg) if False else (
+            logits + jnp.concatenate([jnp.zeros((vocab_size,), jnp.float32), neg]))
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

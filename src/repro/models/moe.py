@@ -1,0 +1,166 @@
+"""Mixture-of-Experts FFN with top-k token-choice routing.
+
+TPU-native formulation: capacity-bounded scatter dispatch (GShard-style
+semantics, scatter/gather instead of the (T,E,C) one-hot einsum so peak
+memory stays O(E*C*d) not O(T*E*C)).  Expert weights carry a leading expert
+dim so expert compute is one batched einsum — shardable over the "model"
+axis (expert-parallel when E divides the axis, d_ff-parallel otherwise).
+
+Aux losses: load-balance (Switch) + router z-loss, returned for logging and
+added to the training objective.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, dtype_of
+
+
+def init_moe(key, cfg: ArchConfig):
+    assert cfg.moe is not None
+    dt = dtype_of(cfg.param_dtype)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), in_axis=1, dtype=dt),
+        "w_up": dense_init(ks[2], (e, d, f), in_axis=1, dtype=dt),
+        "w_down": dense_init(ks[3], (e, f, d), in_axis=1, dtype=dt),
+    }
+
+
+def capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)   # pad to VPU sublane multiple
+
+
+def moe_ffn(params, x: jnp.ndarray, cfg: ArchConfig
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    C = capacity(T, cfg)
+
+    xf = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)                     # (T,k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert, in token order
+    e_flat = idx.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)        # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                  # exclusive cumsum
+    pos_in_e = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, e_flat * C + pos_in_e, E * C)       # overflow -> trash row
+
+    # dispatch: (E*C+1, d) buffer, last row is the trash slot
+    x_rep = jnp.repeat(xf, k, axis=0)                          # (T*k, d)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].add(x_rep)
+    xe = buf[: E * C].reshape(E, C, d)
+
+    # expert FFN (SwiGLU family)
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(x.dtype))
+    act = jax.nn.silu(g) if cfg.ffn_act == "swiglu" else jax.nn.gelu(g)
+    ye = jnp.einsum("ecf,efd->ecd", act * u, params["w_down"].astype(x.dtype))
+
+    # combine
+    y_rep = ye.reshape(E * C, d)[jnp.minimum(slot, E * C - 1)]  # (T*k, d)
+    y_rep = jnp.where(keep[:, None], y_rep, 0)
+    y_rep = y_rep * weights.reshape(-1)[:, None].astype(y_rep.dtype)
+    y = y_rep.reshape(T, k, d).sum(axis=1).reshape(B, S, d)
+
+    # aux: Switch load-balance loss + router z-loss
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32).mean(axis=0)
+    lb = E * jnp.sum(me * ce)
+    zloss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    aux = 0.01 * lb + 0.001 * zloss
+    return y, aux
+
+
+GROUP_SIZE = 512
+
+
+def moe_ffn_einsum(params, x: jnp.ndarray, cfg: ArchConfig
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard-style grouped one-hot einsum dispatch (hillclimb variant).
+
+    The scatter path resolves cross-device dispatch with all-reduces over
+    the (E*C, d) capacity buffer — ~1 TB/device/step on granite train_4k
+    (measured).  Here tokens are split into groups of GROUP_SIZE, dispatch/
+    combine are dense one-hot einsums, and the group axis partitions
+    cleanly (GSPMD keeps everything local; only param-grad all-reduces
+    remain).  Dispatch matmul FLOPs are the price — MXU-shaped and ~100x
+    cheaper than the collectives they replace (napkin math in
+    EXPERIMENTS.md Section Perf)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    gs = min(GROUP_SIZE, T)
+    G = T // gs
+    assert T % gs == 0, (T, gs)
+    Cg = max(8, int(math.ceil(gs * k / E * m.capacity_factor) + 7) // 8 * 8)
+
+    xg = x.reshape(G, gs, d)
+    if cfg.moe_group_shard:
+        # pin the group axis to "model": expert compute stays local and
+        # XLA gathers the (377 MB) expert weights per layer instead of
+        # all-reducing the 10x-inflated (G,E,C,d) capacity buffers --
+        # measured 1 TB/device/step without this (EXPERIMENTS Section Perf).
+        from jax.sharding import PartitionSpec as P
+        xg = jax.lax.with_sharding_constraint(xg, P("model", None, None))
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)                     # (G,gs,k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert, within its group
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)          # (G,gs,k,E)
+    flat = onehot.reshape(G, gs * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                       # exclusive
+    pos = pos.reshape(G, gs, k, E)
+    # capacity slot of each (token, k) under ITS chosen expert: (G,gs,k)
+    p_k = jnp.einsum("gske,gske->gsk", pos, onehot)
+    keep = (p_k < Cg).astype(jnp.float32)
+    cap_oh = jax.nn.one_hot(p_k.astype(jnp.int32), Cg,
+                            dtype=jnp.float32) * keep[..., None]
+    # (G,gs,E,Cg) dispatch/combine via contraction over the k slots —
+    # each (g,s,k) is hot at exactly one (e,c) pair, so this is exact.
+    disp = jnp.einsum("gske,gskc->gsec", onehot, cap_oh).astype(x.dtype)
+    comb = jnp.einsum("gske,gskc,gsk->gsec", onehot, cap_oh,
+                      weights).astype(x.dtype)
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg)                 # (G,E,Cg,d)
+    if cfg.moe_group_shard:
+        from jax.sharding import PartitionSpec as P
+        xe = jax.lax.with_sharding_constraint(
+            xe, P("model", None, None, None))
+    g = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(x.dtype))
+    act = jax.nn.silu(g) if cfg.ffn_act == "swiglu" else jax.nn.gelu(g)
+    ye = jnp.einsum("gecf,efd->gecd", act * u,
+                    params["w_down"].astype(x.dtype))
+    if cfg.moe_group_shard:
+        from jax.sharding import PartitionSpec as P
+        ye = jax.lax.with_sharding_constraint(
+            ye, P("model", None, None, None))
+    y = jnp.einsum("gsec,gecd->gsd", comb, ye).reshape(B, S, d)
+
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32).mean(axis=(0, 1))
+    lb = E * jnp.sum(me * ce)
+    zloss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return y, 0.01 * lb + 0.001 * zloss

@@ -1,0 +1,440 @@
+"""Recurrent mixers: Mamba selective scan, xLSTM (mLSTM + sLSTM).
+
+Training uses chunked scans (Mamba: associative scan within chunks; mLSTM /
+sLSTM: stabilized sequential scan — sLSTM is inherently sequential, which is
+exactly what the xLSTM paper says).  Decode carries O(1) state per layer:
+this is why the ssm/hybrid archs run ``long_500k`` natively.
+
+The XLA forms here are the oracles for the ``ssm_scan`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, dtype_of
+
+CONV_WIDTH = 4
+MAMBA_CHUNK = 128
+RECURRENT_CHUNK = 256
+
+
+def scan_chunked(step, carry, xs, chunk: int):
+    """lax.scan in checkpointed chunks: backward stores carries only at
+    chunk boundaries and recomputes inside — O(S/chunk) instead of O(S)
+    saved state (the 1.5 TB/device mLSTM disaster the first xlstm dry-run
+    exposed).  xs leaves: (S, ...); returns (carry, ys)."""
+    S = jax.tree.leaves(xs)[0].shape[0]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    xs_c = jax.tree.map(
+        lambda l: l.reshape((n, chunk) + l.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(carry, x_chunk):
+        return jax.lax.scan(step, carry, x_chunk)
+
+    carry, ys_c = jax.lax.scan(outer, carry, xs_c)
+    ys = jax.tree.map(
+        lambda l: l.reshape((n * chunk,) + l.shape[2:]), ys_c)
+    return carry, ys
+
+
+# ===========================================================================
+# Mamba selective scan
+# ===========================================================================
+def init_mamba(key, cfg: ArchConfig, d_in: int):
+    dt = dtype_of(cfg.param_dtype)
+    d, ds = cfg.d_model, cfg.ssm_state
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), dtype=dt),
+        "conv_w": dense_init(ks[1], (CONV_WIDTH, d_in), dtype=dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * ds), dtype=dt),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_in), dtype=dt),
+        "dt_bias": jnp.full((d_in,), -4.6, dt),   # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(dt),
+        "D": jnp.ones((d_in,), dt),
+        "out_proj": dense_init(ks[4], (d_in, d), dtype=dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via shifts. x: (B, S, d_in); w: (W, d_in)."""
+    out = x * w[-1]
+    for i in range(1, CONV_WIDTH):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _mamba_coeffs(params, u: jnp.ndarray, cfg: ArchConfig):
+    """u: (B, S, d_in) post-conv. Returns a,b,C for h_t = a h_{t-1} + b."""
+    ds = cfg.ssm_state
+    dt_rank = params["dt_proj"].shape[0]
+    proj = jnp.einsum("bsd,dr->bsr", u, params["x_proj"].astype(u.dtype))
+    dt_lowrank, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_lowrank, params["dt_proj"].astype(u.dtype))
+        + params["dt_bias"].astype(u.dtype)).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (d_in, ds)
+    a = jnp.exp(delta[..., None] * A)                          # (B,S,d_in,ds)
+    b = (delta * u.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[:, :, None, :]
+    return a, b, Cc.astype(jnp.float32)
+
+
+def _assoc_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray):
+    """h_t = a_t h_{t-1} + b_t along axis 1, with initial h0."""
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh, hh[:, -1]
+
+
+def mamba_scan(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Training/prefill form. x: (B, S, d_model) -> (B, S, d_model)."""
+    B, S, _ = x.shape
+    d_in = params["out_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = _causal_conv(u, params["conv_w"].astype(u.dtype), params["conv_b"].astype(u.dtype))
+
+    chunk = min(MAMBA_CHUNK, S)
+    n_chunks = (S + chunk - 1) // chunk
+    pad = n_chunks * chunk - S
+    if pad:
+        u_p = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    else:
+        u_p = u
+    uc = u_p.reshape(B, n_chunks, chunk, d_in).transpose(1, 0, 2, 3)
+
+    ds = cfg.ssm_state
+    h0 = jnp.zeros((B, d_in, ds), jnp.float32)
+
+    def step(h, u_chunk):
+        a, b, Cc = _mamba_coeffs(params, u_chunk, cfg)
+        hh, h_last = _assoc_scan(a, b, h)
+        y = jnp.einsum("bsdn,bsn->bsd", hh, Cc)
+        return h_last, y.astype(x.dtype)
+
+    _, ys = jax.lax.scan(step, h0, uc)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * chunk, d_in)[:, :S]
+    y = y + u * params["D"].astype(u.dtype)
+    out = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", out, params["out_proj"].astype(out.dtype))
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int, d_in: int, dtype):
+    return {
+        "h": jnp.zeros((batch, d_in, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, d_in), dtype),
+    }
+
+
+def mamba_decode(params, x: jnp.ndarray, state, cfg: ArchConfig):
+    """One-token decode. x: (B, 1, d_model). state: {'h','conv'}."""
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    u, z = jnp.split(xz, 2, axis=-1)
+    hist = jnp.concatenate([state["conv"], u], axis=1)          # (B, W, d_in)
+    w = params["conv_w"].astype(u.dtype)
+    conv_out = jnp.einsum("bwd,wd->bd", hist, w) + params["conv_b"].astype(u.dtype)
+    u1 = jax.nn.silu(conv_out)[:, None, :]
+    a, b, Cc = _mamba_coeffs(params, u1, cfg)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None, :].astype(x.dtype)
+    y = y + u1 * params["D"].astype(u1.dtype)
+    out = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", out, params["out_proj"].astype(out.dtype))
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix memory)
+# ===========================================================================
+def init_mlstm(key, cfg: ArchConfig):
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    d_in = 2 * d
+    heads = cfg.mlstm_heads or cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * d_in), dtype=dt),
+        "wq": dense_init(ks[1], (d_in, d_in), dtype=dt),
+        "wk": dense_init(ks[2], (d_in, d_in), dtype=dt),
+        "wv": dense_init(ks[3], (d_in, d_in), dtype=dt),
+        "w_igate": dense_init(ks[4], (d_in, heads), scale=0.1, dtype=dt),
+        "w_fgate": dense_init(ks[5], (d_in, heads), scale=0.1, dtype=dt),
+        "fgate_bias": jnp.full((heads,), 3.0, dt),   # start mostly-remember
+        "igate_bias": jnp.zeros((heads,), dt),
+        "down_proj": dense_init(ks[6], (d_in, d), dtype=dt),
+    }
+
+
+def _mlstm_qkvif(params, x: jnp.ndarray, heads: int):
+    u, g = jnp.split(
+        jnp.einsum("bsd,de->bse", x, params["up_proj"].astype(x.dtype)), 2, axis=-1)
+    d_in = u.shape[-1]
+    hd = d_in // heads
+    def proj(w):
+        y = jnp.einsum("bse,ef->bsf", u, w.astype(u.dtype))
+        return y.reshape(y.shape[0], y.shape[1], heads, hd)
+    q, k, v = proj(params["wq"]), proj(params["wk"]), proj(params["wv"])
+    k = k / jnp.sqrt(jnp.asarray(hd, k.dtype))
+    i_pre = (jnp.einsum("bse,eh->bsh", u, params["w_igate"].astype(u.dtype))
+             + params["igate_bias"].astype(u.dtype)).astype(jnp.float32)
+    f_pre = (jnp.einsum("bse,eh->bsh", u, params["w_fgate"].astype(u.dtype))
+             + params["fgate_bias"].astype(u.dtype)).astype(jnp.float32)
+    return q, k, v, i_pre, f_pre, g
+
+
+MLSTM_CHUNK = 512
+
+
+def mlstm_scan(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Training/prefill mLSTM — stabilized **chunkwise-parallel** form.
+
+    The sequential recurrence needs the (hd, hd) matrix memory C_t at every
+    step of the backward pass (268 MB x seq_len per device at xlstm-1.3b
+    scale — the first dry-run measured 1.5 TB).  The chunkwise form only
+    carries C at chunk boundaries and expresses the intra-chunk part as a
+    masked-decay attention matmul (MXU-shaped), exactly the structure the
+    flash_attention Pallas kernel tiles on TPU.
+
+    Per chunk of length L (log-domain gates, running stabilizer m):
+        b_t   = cumsum(log f)            (within chunk)
+        inter = exp(b_t + m_prev - m_t) * q_t @ C_prev
+        intra = [(q k^T) * D] v,  D_tj = exp(b_t - b_j + i_j - m_t) (j<=t)
+        C_new = exp(B_L + m_prev - m_new) C_prev
+                + sum_j exp(B_L - b_j + i_j - m_new) k_j v_j^T
+        out_t = (inter + intra) / max(|q_t . n_t|, exp(-m_t))
+    """
+    B, S, d = x.shape
+    heads = cfg.mlstm_heads or cfg.n_heads
+    q, k, v, i_pre, f_pre, g = _mlstm_qkvif(params, x, heads)
+    hd = q.shape[-1]
+    L = min(MLSTM_CHUNK, S)
+    if S % L:
+        L = math.gcd(S, L) or 1
+    n_chunks = S // L
+
+    def to_chunks(a):  # (B,S,H,...) -> (n,B,L,H,...)
+        return a.reshape((B, n_chunks, L) + a.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, a.ndim + 1)))
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic = i_pre.reshape(B, n_chunks, L, heads).transpose(1, 0, 2, 3)
+    fc = f_pre.reshape(B, n_chunks, L, heads).transpose(1, 0, 2, 3)
+
+    C0 = jnp.zeros((B, heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, heads, hd), jnp.float32)
+    m0 = jnp.zeros((B, heads), jnp.float32)
+
+    @jax.checkpoint
+    def chunk_step(carry, inp):
+        C_prev, n_prev, m_prev = carry
+        qt, kt, vt, it, ft = inp                       # (B,L,H,hd) / (B,L,H)
+        qt = qt.astype(jnp.float32)
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        log_f = jax.nn.log_sigmoid(ft).astype(jnp.float32)  # (B,L,H)
+        b = jnp.cumsum(log_f, axis=1)                  # (B,L,H)
+        B_L = b[:, -1]                                 # (B,H)
+
+        # per-position stabilizer: m_t = max(m_prev + b_t, max_{j<=t}(b_t - b_j + i_j))
+        s_j = it - b                                   # (B,L,H)
+        run_max = jax.lax.cummax(s_j, axis=1)
+        m_t = jnp.maximum(m_prev[:, None] + b, b + run_max)   # (B,L,H)
+
+        # intra-chunk decay matrix D (B,H,L,L)
+        bT = b.transpose(0, 2, 1)                      # (B,H,L)
+        sT = s_j.transpose(0, 2, 1)
+        D = bT[:, :, :, None] + sT[:, :, None, :] \
+            - m_t.transpose(0, 2, 1)[:, :, :, None]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tri[None, None], jnp.exp(D), 0.0)
+
+        scores = jnp.einsum("blhd,bshd->bhls", qt, kt)      # (B,H,L,L)
+        intra = jnp.einsum("bhls,bshd->blhd", scores * D, vt)
+
+        decay_t = jnp.exp(m_prev[:, None] + b - m_t)        # (B,L,H)
+        inter = jnp.einsum("blhd,bhed->blhe", qt, C_prev) * decay_t[..., None]
+        n_t = jnp.einsum("bhls,bshd->blhd", D, kt) \
+            + n_prev[:, None] * decay_t[..., None]
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("blhd,blhd->blh", qt, n_t)),
+            jnp.exp(-m_t))
+        h = (intra + inter) / den[..., None]                # (B,L,H,hd)
+
+        # chunk-boundary state update
+        m_new = jnp.maximum(m_prev + B_L,
+                            B_L + jnp.max(s_j, axis=1))     # (B,H)
+        w_j = jnp.exp(B_L[:, None] + s_j - m_new[:, None])  # (B,L,H)
+        C_new = C_prev * jnp.exp(m_prev + B_L - m_new)[..., None, None] \
+            + jnp.einsum("blhd,blhe->bhde", vt * w_j[..., None], kt)
+        n_new = n_prev * jnp.exp(m_prev + B_L - m_new)[..., None] \
+            + jnp.einsum("blhd,blh->bhd", kt, w_j)
+        return (C_new, n_new, m_new), h
+
+    _, hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, heads * hd).astype(x.dtype)
+    out = h * jax.nn.silu(g)
+    return jnp.einsum("bse,ed->bsd", out, params["down_proj"].astype(out.dtype))
+
+
+def mlstm_scan_sequential(params, x: jnp.ndarray, cfg: ArchConfig
+                          ) -> jnp.ndarray:
+    """Stabilized sequential oracle (tests validate chunkwise against it)."""
+    B, S, d = x.shape
+    heads = cfg.mlstm_heads or cfg.n_heads
+    q, k, v, i_pre, f_pre, g = _mlstm_qkvif(params, x, heads)
+    hd = q.shape[-1]
+
+    C0 = jnp.zeros((B, heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, heads, hd), jnp.float32)
+    m0 = jnp.full((B, heads), -1e9, jnp.float32)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp                    # (B,H,hd) x3, (B,H) x2
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_s = jnp.exp(it - m_new)[..., None]
+        f_s = jnp.exp(log_f + m - m_new)[..., None]
+        kf, vf = kt.astype(jnp.float32), vt.astype(jnp.float32)
+        C = f_s[..., None] * C + i_s[..., None] * (vf[..., :, None] * kf[..., None, :])
+        n = f_s * n + i_s * kf
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    _, hs = scan_chunked(step, (C0, n0, m0), xs, RECURRENT_CHUNK)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, heads * hd).astype(x.dtype)
+    out = h * jax.nn.silu(g)
+    return jnp.einsum("bse,ed->bsd", out, params["down_proj"].astype(out.dtype))
+
+
+def mlstm_state_init(cfg: ArchConfig, batch: int, dtype):
+    heads = cfg.mlstm_heads or cfg.n_heads
+    d_in = 2 * cfg.d_model
+    hd = d_in // heads
+    return {
+        "C": jnp.zeros((batch, heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, heads, hd), jnp.float32),
+        "m": jnp.full((batch, heads), -1e9, jnp.float32),
+    }
+
+
+def mlstm_decode(params, x: jnp.ndarray, state, cfg: ArchConfig):
+    B = x.shape[0]
+    heads = cfg.mlstm_heads or cfg.n_heads
+    q, k, v, i_pre, f_pre, g = _mlstm_qkvif(params, x, heads)
+    qt, kt, vt = q[:, 0], k[:, 0], v[:, 0]
+    it, ft = i_pre[:, 0], f_pre[:, 0]
+    C, n, m = state["C"], state["n"], state["m"]
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    i_s = jnp.exp(it - m_new)[..., None]
+    f_s = jnp.exp(log_f + m - m_new)[..., None]
+    kf, vf = kt.astype(jnp.float32), vt.astype(jnp.float32)
+    C = f_s[..., None] * C + i_s[..., None] * (vf[..., :, None] * kf[..., None, :])
+    n = f_s * n + i_s * kf
+    qf = qt.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, -1).astype(x.dtype)
+    out = h * jax.nn.silu(g)
+    out = jnp.einsum("bse,ed->bsd", out, params["down_proj"].astype(out.dtype))
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar memory; inherently sequential)
+# ===========================================================================
+def init_slstm(key, cfg: ArchConfig):
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(k1, (d, 4 * d), dtype=dt),
+        "w_rec": dense_init(k2, (d, 4 * d), scale=0.5, dtype=dt),
+        "bias": jnp.concatenate([jnp.zeros((2 * d,)), jnp.full((d,), 3.0),
+                                 jnp.zeros((d,))]).astype(dt),  # z,i,f,o
+        "out_proj": dense_init(k3, (d, d), dtype=dt),
+    }
+
+
+def _slstm_step(params, carry, pre):
+    h, c, n, m = carry
+    gates = pre + jnp.einsum("bd,de->be", h.astype(pre.dtype),
+                             params["w_rec"].astype(pre.dtype)).astype(jnp.float32)
+    d = h.shape[-1]
+    z_pre, i_pre, f_pre, o_pre = jnp.split(gates, 4, axis=-1)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c = f_s * c + i_s * z
+    n = f_s * n + i_s
+    h_new = o * c / jnp.maximum(n, jnp.exp(-m_new))
+    return (h_new, c, n, m_new), h_new
+
+
+def slstm_scan(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    B, S, d = x.shape
+    pre = (jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+           + params["bias"].astype(x.dtype)).astype(jnp.float32)
+    h0 = jnp.zeros((B, d), jnp.float32)
+    c0 = jnp.zeros((B, d), jnp.float32)
+    n0 = jnp.zeros((B, d), jnp.float32)
+    m0 = jnp.full((B, d), -1e9, jnp.float32)
+
+    def step(carry, p):
+        return _slstm_step(params, carry, p)
+
+    _, hs = scan_chunked(step, (h0, c0, n0, m0), pre.transpose(1, 0, 2),
+                         RECURRENT_CHUNK)
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", h, params["out_proj"].astype(h.dtype))
+
+
+def slstm_state_init(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e9, jnp.float32),
+    }
+
+
+def slstm_decode(params, x: jnp.ndarray, state, cfg: ArchConfig):
+    pre = (jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+           + params["bias"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    (h, c, n, m), h_out = _slstm_step(params, carry, pre)
+    out = jnp.einsum("bd,de->be", h_out.astype(x.dtype),
+                     params["out_proj"].astype(x.dtype))[:, None, :]
+    return out, {"h": h, "c": c, "n": n, "m": m}

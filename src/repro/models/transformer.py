@@ -1,0 +1,356 @@
+"""Composable transformer stack covering all assigned architecture families.
+
+Layer stacking uses ``lax.scan`` over the repeating unit of the block
+pattern (e.g. xLSTM's [7x mLSTM, 1x sLSTM] unit), keeping HLO size and
+compile time bounded for 126-layer models.  Decode carries per-layer state
+(KV cache / SSM state) stacked along the scan dim.
+
+Public API:
+    init_lm(key, cfg)                      -> params
+    forward(params, inputs, cfg, ...)      -> (logits, aux)
+    loss_fn(params, inputs, cfg)           -> scalar loss
+    init_decode_state(cfg, batch, cache_len, dtype, window) -> state
+    decode_step(params, state, tokens, step, cfg, window)   -> (logits, state)
+    encode(params, enc_embeds, cfg)        -> memory   (enc-dec archs)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, FFN_DENSE, FFN_MOE, FFN_NONE, HYMBA,
+                                MAMBA, MLSTM, SLSTM, SWA, ArchConfig)
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (chunked_ce_from_hidden, cross_entropy,
+                                 dense_init, dtype_of, embed, ffn,
+                                 init_embedding, init_ffn, init_rmsnorm,
+                                 lm_logits, rmsnorm)
+
+
+# ---------------------------------------------------------------------------
+# Pattern factorization: smallest repeating unit
+def factor_pattern(pattern: Tuple[str, ...]) -> Tuple[Tuple[str, ...], int]:
+    n = len(pattern)
+    for ul in range(1, n + 1):
+        if n % ul == 0 and pattern == pattern[:ul] * (n // ul):
+            return pattern[:ul], n // ul
+    return pattern, 1
+
+
+# ---------------------------------------------------------------------------
+# Single sub-layer (one entry of the unit)
+def init_sublayer(key, kind: str, cfg: ArchConfig, cross: bool = False):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"ln1": init_rmsnorm(cfg.d_model)}
+    if kind in (ATTN, SWA):
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+    elif kind == MAMBA:
+        p["mamba"] = ssm_lib.init_mamba(ks[0], cfg, d_in=2 * cfg.d_model)
+    elif kind == MLSTM:
+        p["mlstm"] = ssm_lib.init_mlstm(ks[0], cfg)
+    elif kind == SLSTM:
+        p["slstm"] = ssm_lib.init_slstm(ks[0], cfg)
+    elif kind == HYMBA:
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+        p["mamba"] = ssm_lib.init_mamba(ks[1], cfg, d_in=cfg.d_model)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["ln_cross"] = init_rmsnorm(cfg.d_model)
+        p["cross"] = attn_lib.init_attention(ks[2], cfg, cross=True)
+    if cfg.ffn_kind == FFN_DENSE and cfg.d_ff:
+        p["ln2"] = init_rmsnorm(cfg.d_model)
+        p["ffn"] = init_ffn(ks[3], cfg)
+    elif cfg.ffn_kind == FFN_MOE:
+        p["ln2"] = init_rmsnorm(cfg.d_model)
+        p["moe"] = moe_lib.init_moe(ks[3], cfg)
+    return p
+
+
+def apply_sublayer(p, kind: str, x: jnp.ndarray, cfg: ArchConfig, *,
+                   window: int = 0, memory: Optional[jnp.ndarray] = None,
+                   causal: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence (train / prefill) form. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in (ATTN, SWA):
+        mix = attn_lib.self_attention(p["attn"], h, cfg, causal=causal,
+                                      window=window)
+    elif kind == MAMBA:
+        mix = ssm_lib.mamba_scan(p["mamba"], h, cfg)
+    elif kind == MLSTM:
+        mix = ssm_lib.mlstm_scan(p["mlstm"], h, cfg)
+    elif kind == SLSTM:
+        mix = ssm_lib.slstm_scan(p["slstm"], h, cfg)
+    elif kind == HYMBA:
+        a = attn_lib.self_attention(p["attn"], h, cfg, causal=causal,
+                                    window=window)
+        m = ssm_lib.mamba_scan(p["mamba"], h, cfg)
+        mix = 0.5 * (a + m)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if memory is not None and "cross" in p:
+        hc = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attn_lib.cross_attention(p["cross"], hc, memory, cfg)
+    if "ffn" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + ffn(p["ffn"], h2, cfg)
+    elif "moe" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        moe_fn = moe_lib.moe_ffn_einsum if cfg.moe_impl == "einsum" \
+            else moe_lib.moe_ffn
+        y, a = moe_fn(p["moe"], h2, cfg)
+        x = x + y
+        aux = aux + a
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode-time sub-layer state
+def sublayer_state(kind: str, cfg: ArchConfig, batch: int, cache_len: int,
+                   dtype) -> Dict[str, Any]:
+    s: Dict[str, Any] = {}
+    if kind in (ATTN, SWA, HYMBA):
+        hd = cfg.resolved_head_dim
+        s["k"] = jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype)
+        s["v"] = jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype)
+    if kind == MAMBA:
+        s["mamba"] = ssm_lib.mamba_state_init(cfg, batch, 2 * cfg.d_model, dtype)
+    if kind == HYMBA:
+        s["mamba"] = ssm_lib.mamba_state_init(cfg, batch, cfg.d_model, dtype)
+    if kind == MLSTM:
+        s["mlstm"] = ssm_lib.mlstm_state_init(cfg, batch, dtype)
+    if kind == SLSTM:
+        s["slstm"] = ssm_lib.slstm_state_init(cfg, batch, dtype)
+    return s
+
+
+def apply_sublayer_decode(p, kind: str, x: jnp.ndarray, state, step,
+                          cfg: ArchConfig, *, window: int = 0,
+                          memory: Optional[jnp.ndarray] = None):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    new_state = dict(state)
+    if kind in (ATTN, SWA):
+        mix, kv = attn_lib.decode_attention(
+            p["attn"], h, {"k": state["k"], "v": state["v"]}, step, cfg,
+            window=window)
+        new_state.update(kv)
+    elif kind == MAMBA:
+        mix, ms = ssm_lib.mamba_decode(p["mamba"], h, state["mamba"], cfg)
+        new_state["mamba"] = ms
+    elif kind == MLSTM:
+        mix, ms = ssm_lib.mlstm_decode(p["mlstm"], h, state["mlstm"], cfg)
+        new_state["mlstm"] = ms
+    elif kind == SLSTM:
+        mix, ms = ssm_lib.slstm_decode(p["slstm"], h, state["slstm"], cfg)
+        new_state["slstm"] = ms
+    elif kind == HYMBA:
+        a, kv = attn_lib.decode_attention(
+            p["attn"], h, {"k": state["k"], "v": state["v"]}, step, cfg,
+            window=window)
+        m, ms = ssm_lib.mamba_decode(p["mamba"], h, state["mamba"], cfg)
+        mix = 0.5 * (a + m)
+        new_state.update(kv)
+        new_state["mamba"] = ms
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if memory is not None and "cross" in p:
+        hc = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attn_lib.cross_attention(p["cross"], hc, memory, cfg)
+    if "ffn" in p:
+        x = x + ffn(p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    elif "moe" in p:
+        moe_fn = moe_lib.moe_ffn_einsum if cfg.moe_impl == "einsum" \
+            else moe_lib.moe_ffn
+        y, _ = moe_fn(p["moe"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        x = x + y
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full model
+def init_lm(key, cfg: ArchConfig):
+    unit, n_groups = factor_pattern(cfg.pattern())
+    ks = jax.random.split(key, 8 + len(unit))
+    params: Dict[str, Any] = {"embed": init_embedding(ks[0], cfg)}
+    cross = cfg.n_enc_layers > 0
+
+    unit_params = []
+    for j, kind in enumerate(unit):
+        def init_one(k, kind=kind):
+            return init_sublayer(k, kind, cfg, cross=cross)
+        keys = jax.random.split(ks[2 + j], n_groups)
+        unit_params.append(jax.vmap(init_one)(keys))
+    params["unit"] = tuple(unit_params)
+    params["final_norm"] = init_rmsnorm(cfg.d_model)
+
+    if cfg.frontend != "none":
+        # stub-frontend projector (patch/frame embeddings -> d_model)
+        params["frontend_proj"] = dense_init(
+            ks[3], (cfg.d_model, cfg.d_model), dtype=dtype_of(cfg.param_dtype))
+
+    if cfg.n_enc_layers:
+        enc_keys = jax.random.split(ks[4], cfg.n_enc_layers)
+
+        def init_enc(k):
+            return init_sublayer(k, ATTN, cfg, cross=False)
+        params["enc_unit"] = jax.vmap(init_enc)(enc_keys)
+        params["enc_norm"] = init_rmsnorm(cfg.d_model)
+    return params
+
+
+def _scan_unit(params, x, unit, cfg, apply_fn):
+    """Scan over layer groups; apply_fn(p_j, kind, x) -> (x, aux).
+
+    Nested remat: the whole unit is checkpointed (scan saves only the
+    inter-group activations) AND each sublayer is checkpointed inside it,
+    so during a group's backward only ONE sublayer's internals are live
+    (without this, xlstm's seven mLSTM sublayers hold their chunk-boundary
+    states simultaneously — 41 GB/device)."""
+    def body(carry, unit_slice):
+        x, aux = carry
+        for p_j, kind in zip(unit_slice, unit):
+            f = apply_fn
+            if cfg.remat and len(unit) > 1:
+                f = jax.checkpoint(apply_fn, static_argnums=(1,))
+            x, a = f(p_j, kind, x)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["unit"])
+    return x, aux
+
+
+def encode(params, enc_embeds: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Encoder stack for enc-dec archs. enc_embeds: (B, F, d)."""
+    x = enc_embeds.astype(dtype_of(cfg.compute_dtype))
+    if "frontend_proj" in params:
+        x = jnp.einsum("bfd,de->bfe", x, params["frontend_proj"].astype(x.dtype))
+
+    def body(x, p):
+        y, _ = apply_sublayer(p, ATTN, x, cfg, causal=False)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_unit"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params, inputs: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
+            window: int = 0, noise: Optional[Tuple] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training / prefill forward. Returns (final hidden states over text
+    positions, aux loss) — the LM head is applied by the caller
+    (``loss_fn`` uses the chunked CE; ``forward_logits`` materializes all).
+
+    inputs: tokens (B,S_text) [, frontend_embeds (B,F,d)] [, enc_embeds].
+    ``noise=(key, sigma)`` applies the paper's input-level LDP perturbation
+    in embedding space (tokens are discrete; continuous frontend inputs are
+    perturbed directly — DESIGN.md Section 6).
+    """
+    unit, _ = factor_pattern(cfg.pattern())
+    x = embed(params["embed"], inputs["tokens"], cfg)
+    if noise is not None:
+        key, sigma = noise
+        x = x + (sigma * jax.random.normal(key, x.shape, jnp.float32)
+                 ).astype(x.dtype)
+    n_front = 0
+    if cfg.frontend != "none" and "frontend_embeds" in inputs and cfg.n_enc_layers == 0:
+        fe = inputs["frontend_embeds"].astype(x.dtype)
+        if noise is not None:
+            key, sigma = noise
+            fe = fe + (sigma * jax.random.normal(
+                jax.random.fold_in(key, 1), fe.shape, jnp.float32)
+                ).astype(fe.dtype)
+        fe = jnp.einsum("bfd,de->bfe", fe, params["frontend_proj"].astype(x.dtype))
+        x = jnp.concatenate([fe, x], axis=1)       # image/audio prefix
+        n_front = fe.shape[1]
+    memory = None
+    if cfg.n_enc_layers:
+        enc_in = inputs["enc_embeds"]
+        if noise is not None:
+            key, sigma = noise
+            enc_in = enc_in + (sigma * jax.random.normal(
+                jax.random.fold_in(key, 2), enc_in.shape, jnp.float32)
+                ).astype(enc_in.dtype)
+        memory = encode(params, enc_in, cfg)
+
+    def apply_fn(p_j, kind, x):
+        return apply_sublayer(p_j, kind, x, cfg, window=window, memory=memory)
+
+    x, aux = _scan_unit(params, x, unit, cfg, apply_fn)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_front:
+        x = x[:, n_front:]
+    return x, aux
+
+
+def forward_logits(params, inputs, cfg: ArchConfig, *, window: int = 0,
+                   noise: Optional[Tuple] = None):
+    """forward() + full LM head (tests / small-scale use)."""
+    x, aux = forward(params, inputs, cfg, window=window, noise=noise)
+    return lm_logits(params["embed"], x, cfg), aux
+
+
+def loss_fn(params, inputs: Dict[str, jnp.ndarray], cfg: ArchConfig,
+            window: int = 0, noise: Optional[Tuple] = None) -> jnp.ndarray:
+    x, aux = forward(params, inputs, cfg, window=window, noise=noise)
+    ce = chunked_ce_from_hidden(params["embed"], x, inputs["labels"], cfg)
+    return ce + aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int, dtype,
+                      window: int = 0) -> Dict[str, Any]:
+    """Stacked per-layer decode state. ``cache_len`` already reflects the
+    sliding window if one is in use."""
+    unit, n_groups = factor_pattern(cfg.pattern())
+    L = min(cache_len, window) if window else cache_len
+    state: Dict[str, Any] = {"layers": []}
+    for kind in unit:
+        one = sublayer_state(kind, cfg, batch, L, dtype)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), one)
+        state["layers"].append(stacked)
+    state["layers"] = tuple(state["layers"])
+    if cfg.n_enc_layers:
+        state["memory"] = jnp.zeros((batch, cfg.frontend_tokens, cfg.d_model),
+                                    dtype)
+    return state
+
+
+def decode_step(params, state, tokens: jnp.ndarray, step, cfg: ArchConfig, *,
+                window: int = 0):
+    """One decode step. tokens: (B, 1) int32; step: scalar int (tokens already
+    in cache). Returns (logits (B, 1, vocab_pad), new_state)."""
+    unit, _ = factor_pattern(cfg.pattern())
+    x = embed(params["embed"], tokens, cfg)
+    memory = state.get("memory")
+
+    def body(x, slices):
+        unit_slice, state_slice = slices
+        new_states = []
+        for p_j, s_j, kind in zip(unit_slice, state_slice, unit):
+            x, ns = apply_sublayer_decode(p_j, kind, x, s_j, step, cfg,
+                                          window=window, memory=memory)
+            new_states.append(ns)
+        return x, tuple(new_states)
+
+    x, new_layers = jax.lax.scan(body, x, (params["unit"], state["layers"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["embed"], x, cfg)
+    new_state = dict(state)
+    new_state["layers"] = new_layers
+    return logits, new_state

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adam, sgd, apply_updates, clip_by_global_norm  # noqa: F401
+from repro.optim.schedules import cosine_schedule, warmup_linear  # noqa: F401

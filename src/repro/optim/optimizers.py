@@ -1,0 +1,93 @@
+"""Pure-JAX pytree optimizers (no optax in this environment).
+
+API mirrors optax:  opt = adam(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params = apply_updates(...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def _lr_at(lr: Schedule, count):
+    return lr(count) if callable(lr) else lr
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda l: l * scale, grads), norm
+
+
+def sgd(lr: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mu": jax.tree.map(
+                lambda l: jnp.zeros_like(l, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        step = _lr_at(lr, count)
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mu"], grads)
+            upd = jax.tree.map(lambda m: -step * m, mu)
+            return upd, {"mu": mu, "count": count}
+        upd = jax.tree.map(lambda g: -step * g.astype(jnp.float32), grads)
+        return upd, {"count": count}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda l: jnp.zeros_like(l, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        step = _lr_at(lr, count)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def u(m_, v_, p=None):
+            upd = -step * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            if weight_decay and p is not None:
+                upd = upd - step * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        if weight_decay and params is not None:
+            upd = jax.tree.map(u, m, v, params)
+        else:
+            upd = jax.tree.map(u, m, v)
+        return upd, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)

@@ -1,0 +1,1 @@
+from repro.serving.engine import ServeEngine, ServeRequest  # noqa: F401

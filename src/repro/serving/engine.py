@@ -1,0 +1,93 @@
+"""Batched serving engine: continuous batched decode over a shared KV /
+SSM state, greedy or temperature sampling, per-request lengths.
+
+``serve_step`` (one token for the whole batch against the existing cache)
+is the function lowered by the decode dry-run shapes; the engine wraps it
+with request management for the example apps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tr
+from repro.models.layers import dtype_of
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    prompt: np.ndarray          # (P,) int32
+    max_new: int = 16
+    temperature: float = 0.0
+    rid: int = 0
+
+
+def make_serve_step(cfg: ArchConfig, window: int = 0):
+    """serve_step(params, state, tokens (B,1), step) -> (logits, state)."""
+
+    def serve_step(params, state, tokens, step):
+        return tr.decode_step(params, state, tokens, step, cfg, window=window)
+
+    return serve_step
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig, batch: int, cache_len: int,
+                 window: int = 0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.window = window
+        self.cache_len = cache_len
+        self.key = jax.random.PRNGKey(seed)
+        self.state = tr.init_decode_state(
+            cfg, batch, cache_len, dtype_of(cfg.compute_dtype), window=window)
+        self._step = jax.jit(make_serve_step(cfg, window))
+
+    def prefill(self, prompts: List[np.ndarray]):
+        """Token-by-token prefill through the decode path (keeps one compiled
+        program; a block-prefill path exists via models.transformer.forward)."""
+        assert len(prompts) <= self.batch
+        maxlen = max(len(p) for p in prompts)
+        toks = np.zeros((self.batch, maxlen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, maxlen - len(p):] = p       # left-pad
+        for t in range(maxlen):
+            logits, self.state = self._step(
+                self.params, self.state, jnp.asarray(toks[:, t:t + 1]),
+                jnp.asarray(t))
+        self.pos = maxlen
+        return logits
+
+    def generate(self, requests: List[ServeRequest]) -> List[np.ndarray]:
+        logits = self.prefill([r.prompt for r in requests])
+        max_new = max(r.max_new for r in requests)
+        outs = [[] for _ in requests]
+        cur = self._sample(logits, requests)
+        for step in range(max_new):
+            for i, r in enumerate(requests):
+                if step < r.max_new:
+                    outs[i].append(int(cur[i, 0]))
+            logits, self.state = self._step(
+                self.params, self.state, cur, jnp.asarray(self.pos + step))
+            cur = self._sample(logits, requests)
+        return [np.asarray(o, np.int32) for o in outs]
+
+    def _sample(self, logits, requests) -> jnp.ndarray:
+        logits = logits[:, -1, :self.cfg.vocab_size]
+        greedy = jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        temps = np.array([max(r.temperature, 1e-6) for r in requests]
+                         + [1e-6] * (self.batch - len(requests)))
+        sampled = jax.random.categorical(
+            sub, logits / jnp.asarray(temps)[:, None])
+        use_greedy = jnp.asarray(
+            [r.temperature == 0.0 for r in requests]
+            + [True] * (self.batch - len(requests)))
+        out = jnp.where(use_greedy, greedy, sampled)
+        return out[:, None].astype(jnp.int32)

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests run on the real single-CPU backend (the dry-run sets its own 512
+# placeholder devices in its own process; never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

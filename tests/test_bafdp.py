@@ -1,0 +1,150 @@
+"""Unit + behaviour tests for the BAFDP algorithm (Eq. 15-22)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FedConfig, MLP_H1
+from repro.core import bafdp, init_fed_state
+from repro.core.byzantine import byz_mask
+from repro.core.privacy import gaussian_c3, perturb_inputs
+from repro.models.forecasting import init_forecaster, mse_loss
+
+CFG = MLP_H1
+
+
+def make_problem(fed, seed=0, b=16):
+    key = jax.random.PRNGKey(seed)
+    state = init_fed_state(key, lambda k: init_forecaster(k, CFG), fed)
+    X = jax.random.normal(key, (fed.n_clients, b, CFG.d_x))
+    Y = jnp.sum(X[..., :3], -1, keepdims=True) * 0.5
+    c3 = gaussian_c3(CFG.d_x + CFG.d_y, fed.dp_delta, fed.dp_sensitivity)
+
+    def local_loss(p, batch, k, eps):
+        x, y = batch
+        return mse_loss(p, perturb_inputs(k, x, eps, 0.02), y, CFG)
+
+    step = jax.jit(functools.partial(
+        bafdp.bafdp_round, local_loss=local_loss, fed=fed, c3=c3,
+        n_samples=200, d_dim=CFG.d_x + CFG.d_y,
+        byz_mask=byz_mask(fed.n_clients, fed.n_byzantine)))
+    return state, (X, Y), step, key
+
+
+def run(fed, n_rounds=60, seed=0):
+    state, batch, step, key = make_problem(fed, seed)
+    losses = []
+    for t in range(n_rounds):
+        state, m = step(state, batch, jax.random.fold_in(key, t))
+        losses.append(float(m["data_loss"]))
+    return state, losses, m
+
+
+def test_converges_clean():
+    fed = FedConfig(n_clients=8, byzantine_frac=0.0, attack="none")
+    _, losses, _ = run(fed)
+    assert losses[-1] < losses[0] * 0.9
+    assert np.isfinite(losses).all()
+
+
+@pytest.mark.parametrize("attack", ["sign_flip", "gaussian", "same_value",
+                                    "alie"])
+def test_robust_under_attack(attack):
+    fed = FedConfig(n_clients=8, byzantine_frac=0.25, attack=attack)
+    _, losses, m = run(fed)
+    assert np.isfinite(losses).all(), f"{attack}: diverged"
+    assert losses[-1] < losses[0] * 1.05, f"{attack}: no progress"
+
+
+def test_eps_stays_feasible():
+    fed = FedConfig(n_clients=6, privacy_budget_a=20.0)
+    state, _, m = run(fed, n_rounds=30)
+    eps = np.asarray(state.eps)
+    assert (eps >= fed.eps_min - 1e-6).all()
+    assert (eps <= fed.privacy_budget_a + 1e-6).all()
+
+
+def test_lambda_nonnegative():
+    fed = FedConfig(n_clients=6)
+    state, _, _ = run(fed, n_rounds=30)
+    assert (np.asarray(state.lam) >= 0).all()
+
+
+def test_consensus_gap_shrinks():
+    fed = FedConfig(n_clients=8, psi=0.02, active_frac=1.0)
+    state, batch, step, key = make_problem(fed)
+    gaps = []
+    for t in range(80):
+        state, m = step(state, batch, jax.random.fold_in(key, t))
+        gaps.append(float(m["consensus_gap"]))
+    assert gaps[-1] < gaps[0], (gaps[0], gaps[-1])
+
+
+def test_async_partial_participation():
+    fed = FedConfig(n_clients=10, active_frac=0.3)
+    state, batch, step, key = make_problem(fed)
+    state, m = step(state, batch, key)
+    assert int(m["n_active"]) == 3
+
+
+def test_inactive_clients_frozen():
+    fed = FedConfig(n_clients=10, active_frac=0.3)
+    state, batch, step, key = make_problem(fed)
+    new_state, m = step(state, batch, key)
+    # at least one client kept exactly its old params (it was inactive)
+    w0 = np.asarray(jax.tree.leaves(state.W)[0])
+    w1 = np.asarray(jax.tree.leaves(new_state.W)[0])
+    per_client_same = np.all(np.isclose(w0, w1), axis=tuple(
+        range(1, w0.ndim)))
+    assert per_client_same.sum() == 7      # 10 clients, 3 active
+
+
+def test_reg_decay_setting1():
+    # a^t = 1/(alpha (t+1)^{1/4}) is nonincreasing in t
+    a = [float(bafdp.reg_decay(0.01, jnp.asarray(t), 0.25))
+         for t in range(10)]
+    assert all(a[i] >= a[i + 1] for i in range(len(a) - 1))
+    np.testing.assert_allclose(a[0], 1 / 0.01, rtol=1e-6)
+
+
+def test_adam_variant_runs():
+    fed = FedConfig(n_clients=4, omega_optimizer="adam", alpha_w=1e-3)
+    _, losses, _ = run(fed, n_rounds=40)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+def test_local_steps_consensus_cadence():
+    """K local steps: z must change only every K-th round."""
+    fed = FedConfig(n_clients=4, local_steps=3, active_frac=1.0)
+    state, batch, step, key = make_problem(fed)
+    z_vals = [np.asarray(jax.tree.leaves(state.z)[0]).copy()]
+    for t in range(6):
+        state, _ = step(state, batch, jax.random.fold_in(key, t))
+        z_vals.append(np.asarray(jax.tree.leaves(state.z)[0]).copy())
+    changed = [not np.allclose(z_vals[i], z_vals[i + 1]) for i in range(6)]
+    assert changed == [False, False, True, False, False, True]
+
+
+def test_convergence_rate_order():
+    """Theorem 1 sanity: rounds-to-threshold grows no faster than ~1/gap^2
+    (we check T(0.5 gap) <= 6x T(gap) on a smooth problem)."""
+    fed = FedConfig(n_clients=6, active_frac=1.0, attack="none",
+                    alpha_w=5e-3)
+    state, batch, step, key = make_problem(fed)
+    gaps = []
+    for t in range(200):
+        state, m = step(state, batch, jax.random.fold_in(key, t))
+        gaps.append(float(m["consensus_gap"]))
+    g0 = gaps[5]
+
+    def t_at(thresh):
+        for i, g in enumerate(gaps):
+            if g <= thresh:
+                return i
+        return len(gaps)
+
+    t1, t2 = t_at(g0 * 0.5), t_at(g0 * 0.25)
+    assert t2 <= max(6 * max(t1, 1), 40), (t1, t2)

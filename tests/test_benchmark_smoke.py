@@ -1,0 +1,41 @@
+"""Benchmark-harness smoke: every suite produces CSV rows in --quick mode
+with tiny round counts (the full run is benchmarks.run / bench_output.txt)."""
+import pytest
+
+from benchmarks import (fig3_privacy_level, fig7_distributiveness,
+                        fig8_robust_convergence, kernel_bench,
+                        roofline_table, table4_byzantine,
+                        theorem1_convergence)
+
+SUITES = {
+    "fig3": fig3_privacy_level.main,
+    "table4": table4_byzantine.main,
+    "fig7": fig7_distributiveness.main,
+    "fig8": fig8_robust_convergence.main,
+    "theorem1": theorem1_convergence.main,
+    "kernels": kernel_bench.main,
+    "roofline": roofline_table.main,
+}
+
+
+@pytest.mark.parametrize("name", sorted(SUITES))
+def test_suite_quick(name):
+    rows = SUITES[name](rounds=8, quick=True)
+    assert rows, name
+    for r in rows:
+        parts = r.split(",", 2)
+        assert len(parts) == 3, r             # name,us_per_call,derived
+        float(parts[1])
+
+
+def test_roofline_artifacts_complete():
+    """All 40 pairs x 2 meshes present with coherent terms."""
+    rows = roofline_table.rows_from_artifacts()
+    if not rows:
+        pytest.skip("dry-run artifacts not generated in this checkout")
+    keys = {(r["arch"], r["shape"], r["mesh"]) for r in rows}
+    assert len(keys) >= 80, len(keys)
+    for r in rows:
+        assert r["t_compute_s"] >= 0 and r["t_memory_s"] > 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert r["flops"] > 0

@@ -1,0 +1,188 @@
+"""Unit + hypothesis property tests: privacy, DRO, Byzantine, aggregators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import FedConfig
+from repro.core import aggregators as agg
+from repro.core import byzantine as byz
+from repro.core import dro
+from repro.core.privacy import (eps_feasible, gaussian_c3,
+                                privacy_accountant, perturb_inputs,
+                                sigma_for_eps)
+
+FED = FedConfig()
+
+
+# ---------------------------------------------------------------- privacy
+def test_c3_formula():
+    import math
+    d, delta, delta_sens = 10, 1e-5, 2.0
+    expect = math.sqrt(2 * d * math.log(1.25 / delta)) * delta_sens
+    assert gaussian_c3(d, delta, delta_sens) == pytest.approx(expect)
+
+
+@given(st.floats(0.1, 50.0))
+@settings(max_examples=25, deadline=None)
+def test_sigma_monotone_in_eps(eps):
+    # more privacy budget -> less noise
+    assert float(sigma_for_eps(eps, 3.0)) >= float(sigma_for_eps(eps + 1, 3.0))
+
+
+def test_perturb_noise_scale():
+    key = jax.random.PRNGKey(0)
+    x = jnp.zeros((200_000,))
+    out = perturb_inputs(key, x, eps=2.0, c3=1.0)
+    assert float(jnp.std(out)) == pytest.approx(0.5, rel=0.05)
+
+
+def test_eps_projection():
+    fed = FedConfig(privacy_budget_a=10.0, eps_min=0.1)
+    e = jnp.array([-5.0, 0.5, 25.0])
+    out = np.asarray(eps_feasible(e, fed))
+    assert out[0] == pytest.approx(0.1)
+    assert out[1] == pytest.approx(0.5)
+    assert out[2] == pytest.approx(10.0)
+
+
+def test_accountant_monotone():
+    hist1 = jnp.full((10,), 0.1)
+    hist2 = jnp.full((100,), 0.1)
+    b1, a1 = privacy_accountant(hist1, 1e-5)
+    b2, a2 = privacy_accountant(hist2, 1e-5)
+    assert b2 > b1 and a2 > a1
+    assert a2 <= b2    # advanced composition no worse than basic
+
+
+# ---------------------------------------------------------------- DRO
+def test_eta_radius_regimes():
+    fed = FedConfig(confidence_gamma=0.05, wasserstein_beta=2.0)
+    big_n = dro.eta_radius(10_000, d=20, fed=fed)
+    small_n = dro.eta_radius(2, d=20, fed=fed)
+    assert big_n < small_n          # more data -> tighter ball
+    assert big_n > 0
+
+
+def test_rho_decreases_with_eps():
+    fed = FedConfig()
+    r1 = float(dro.rho(1.0, 100, 20, 3.0, fed))
+    r2 = float(dro.rho(10.0, 100, 20, 3.0, fed))
+    assert r1 > r2                   # more noise (small eps) -> bigger ball
+
+
+@given(st.integers(2, 40), st.integers(2, 40))
+@settings(max_examples=20, deadline=None)
+def test_spectral_norm_close_to_svd(m, n):
+    key = jax.random.PRNGKey(m * 41 + n)
+    w = jax.random.normal(key, (m, n))
+    est = float(dro._spectral_norm(w, iters=100))
+    true = float(jnp.linalg.norm(w, ord=2))
+    # power iteration is a lower bound converging as (s2/s1)^k
+    assert est <= true * 1.001
+    assert est == pytest.approx(true, rel=0.10)
+
+
+def test_lipschitz_surrogates_positive_and_differentiable():
+    params = {"a": jnp.ones((4, 5)), "b": {"w": jnp.ones((3, 3)) * 2}}
+    for kind in ("spectral", "frobenius"):
+        v = dro.lipschitz_surrogate(params, kind)
+        assert float(v) > 0
+        g = jax.grad(lambda p: dro.lipschitz_surrogate(p, kind))(params)
+        assert all(np.isfinite(np.asarray(l)).all()
+                   for l in jax.tree.leaves(g))
+
+
+# ---------------------------------------------------------------- byzantine
+def _stacked(C=6, D=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(key, (C, D))}
+
+
+@pytest.mark.parametrize("attack", [a for a in byz.ATTACKS
+                                    if a not in ("none", "label_flip")])
+def test_attack_corrupts_only_masked(attack):
+    stacked = _stacked()
+    mask = jnp.array([False, False, True, False, True, False])
+    out = byz.apply_attack(attack, jax.random.PRNGKey(1), stacked, mask)
+    w0, w1 = np.asarray(stacked["w"]), np.asarray(out["w"])
+    honest = ~np.asarray(mask)
+    assert np.allclose(w0[honest], w1[honest])
+    assert not np.allclose(w0[~honest], w1[~honest])
+
+
+def test_byz_mask_count():
+    m = byz.byz_mask(10, 3)
+    assert int(jnp.sum(m)) == 3
+
+
+# ---------------------------------------------------------------- aggregators
+def test_fedavg_is_mean():
+    s = _stacked()
+    out = agg.fedavg(s)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(jnp.mean(s["w"], 0)), rtol=1e-6)
+
+
+def test_median_resists_outlier():
+    s = _stacked(C=5)
+    s["w"] = s["w"].at[0].set(1e6)
+    out = agg.median(s)
+    assert float(jnp.max(jnp.abs(out["w"]))) < 100
+
+
+def test_krum_picks_honest():
+    key = jax.random.PRNGKey(0)
+    C, D = 7, 16
+    honest = jax.random.normal(key, (C, D)) * 0.1
+    stacked = {"w": honest.at[-2:].set(50.0)}     # 2 byzantine
+    out = agg.krum(stacked, n_byzantine=2)
+    assert float(jnp.max(jnp.abs(out["w"]))) < 5.0
+
+
+def test_geomed_resists_outlier():
+    s = _stacked(C=9)
+    s["w"] = s["w"].at[0].set(1e5)
+    out = agg.geomed(s)
+    assert float(jnp.max(jnp.abs(out["w"]))) < 100
+
+
+def test_trimmed_mean_trims():
+    s = {"w": jnp.arange(10.0)[:, None] * jnp.ones((10, 3))}
+    s["w"] = s["w"].at[9].set(1e9)
+    out = agg.trimmed_mean(s, trim_frac=0.2)
+    assert float(jnp.max(out["w"])) < 10
+
+
+def test_centered_clip_bounded():
+    s = _stacked(C=6)
+    center = {"w": jnp.zeros((8,))}
+    s["w"] = s["w"].at[0].set(1e6)
+    out = agg.centered_clip(s, center, tau=1.0)
+    assert float(jnp.linalg.norm(out["w"])) < 10
+
+
+def test_flat_stack_roundtrip():
+    s = {"a": jnp.arange(12.0).reshape(2, 2, 3),
+         "b": jnp.ones((2, 4))}
+    X = agg.flat_stack(s)
+    assert X.shape == (2, 10)
+    template = jax.tree.map(lambda l: l[0], s)
+    back = agg.unflatten_like(X[0], template)
+    np.testing.assert_allclose(np.asarray(back["a"]),
+                               np.asarray(s["a"][0]))
+
+
+@given(st.integers(3, 10), st.integers(0, 2))
+@settings(max_examples=15, deadline=None)
+def test_property_robust_aggregators_bounded(C, B):
+    """Property: with B < C/3 corrupted clients at magnitude M -> inf, the
+    robust aggregates stay within the honest hull scale."""
+    key = jax.random.PRNGKey(C * 13 + B)
+    honest = jax.random.normal(key, (C, 6))
+    s = {"w": honest.at[:B].set(1e7) if B else honest}
+    for f in (agg.median, lambda x: agg.krum(x, B), agg.geomed):
+        out = f(s)
+        if B < (C - 2) / 2:
+            assert float(jnp.max(jnp.abs(out["w"]))) < 1e3

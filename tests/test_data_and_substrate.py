@@ -1,0 +1,179 @@
+"""Data pipeline, optimizers, schedules, checkpointing, async engine."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import Checkpointer, restore_pytree, save_pytree
+from repro.configs import ARCHS, MLP_H1, MLP_H24, reduce_for_smoke
+from repro.core.async_engine import DelayModel, simulate
+from repro.data import DATASETS, build_windows, make_dataset
+from repro.data.tokens import lm_batch, token_stream
+from repro.data.windowing import client_batches, rmse_mae
+from repro.optim import adam, apply_updates, clip_by_global_norm, sgd
+from repro.optim.schedules import cosine_schedule, warmup_linear
+
+
+# --------------------------------------------------------------- data
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_dataset_shapes(name):
+    d = make_dataset(name, n_clients=5, seed=1)
+    C, T = d["traffic"].shape
+    assert C == 5 and T == DATASETS[name].n_hours
+    assert d["text"].shape == (C, T, 4)
+    assert d["meta"].shape == (T, 9)
+    assert (d["traffic"] >= 0).all()
+    # diurnal structure: day hours busier than night hours on average
+    tr = d["traffic"].reshape(C, -1, 24)
+    assert tr[:, :, 10:20].mean() > tr[:, :, 2:5].mean()
+
+
+def test_non_iid_partition():
+    d = make_dataset("milano", n_clients=8, seed=0)
+    means = d["traffic"].mean(axis=1)
+    assert means.max() / means.min() > 1.5    # heterogeneous load levels
+
+
+@pytest.mark.parametrize("cfg", [MLP_H1, MLP_H24])
+def test_windowing(cfg):
+    d = make_dataset("lte", n_clients=3, seed=0)
+    train, test, scalers = build_windows(d, cfg)
+    assert train["x"].shape[2] == cfg.d_x
+    assert train["y"].shape[2] == cfg.horizon
+    assert test["x"].shape[1] > 0
+    assert train["x"].min() >= -1e-6 and train["x"].max() <= 1.5
+    # scaler inverse roundtrip on the target
+    y = train["y"][0, :5]
+    back = scalers[0].inverse_y(y)
+    np.testing.assert_allclose(back, train["y_raw"][0, :5], rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_client_batches_and_metrics():
+    d = make_dataset("trento", n_clients=4, seed=0)
+    train, _, _ = build_windows(d, MLP_H1)
+    rng = np.random.RandomState(0)
+    x, y = client_batches(rng, train, batch=8)
+    assert x.shape[:2] == (4, 8) and y.shape[:2] == (4, 8)
+    r, m = rmse_mae(np.ones((10,)), np.zeros((10,)))
+    assert r == pytest.approx(1.0) and m == pytest.approx(1.0)
+
+
+def test_token_stream_zipf():
+    rng = np.random.RandomState(0)
+    toks = token_stream(rng, 50_000, vocab=1000)
+    assert toks.min() >= 0 and toks.max() < 1000
+    # zipf: the most common token should dominate
+    counts = np.bincount(toks, minlength=1000)
+    assert counts.max() > 5 * np.sort(counts)[-50]
+
+
+def test_lm_batch_frontends():
+    rng = np.random.RandomState(0)
+    vlm = reduce_for_smoke(ARCHS["llava-next-mistral-7b"])
+    b = lm_batch(rng, vlm, batch=2, seq=32)
+    assert b["tokens"].shape == (2, 32 - vlm.frontend_tokens)
+    assert b["frontend_embeds"].shape == (2, vlm.frontend_tokens, vlm.d_model)
+    aud = reduce_for_smoke(ARCHS["seamless-m4t-medium"])
+    b = lm_batch(rng, aud, batch=2, seq=32)
+    assert b["tokens"].shape == (2, 32)
+    assert b["enc_embeds"].shape == (2, aud.frontend_tokens, aud.d_model)
+
+
+# --------------------------------------------------------------- optim
+def _quadratic_losses(opt, steps=60):
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    losses = []
+
+    @jax.jit
+    def one(params, state):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        upd, state = opt.update(g, state, params)
+        return apply_updates(params, upd), state, loss
+
+    for _ in range(steps):
+        params, state, loss = one(params, state)
+        losses.append(float(loss))
+    return losses
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.05, momentum=0.9),
+                                 adam(0.1), adam(0.1, weight_decay=1e-4)])
+def test_optimizers_converge(opt):
+    losses = _quadratic_losses(opt)
+    assert losses[-1] < 1e-2 * losses[0]
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_schedules():
+    for sched in (warmup_linear(1.0, 10, 100),
+                  cosine_schedule(1.0, 10, 100)):
+        v5 = float(sched(jnp.asarray(5)))
+        v10 = float(sched(jnp.asarray(10)))
+        v90 = float(sched(jnp.asarray(90)))
+        assert v5 < v10 and v90 < v10
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_nested():
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": (jnp.zeros((2,)), jnp.asarray(3))}}
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "x.npz")
+        save_pytree(p, tree)
+        back = restore_pytree(p, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.dtype == b.dtype
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32))
+
+
+def test_checkpointer_rolls():
+    with tempfile.TemporaryDirectory() as td:
+        ck = Checkpointer(td, keep=2)
+        t = {"w": jnp.zeros(2)}
+        for s in (1, 5, 9):
+            ck.save(t, s)
+        assert ck.latest_step() == 9
+        files = [f for f in os.listdir(td) if f.endswith(".npz")]
+        assert len(files) == 2
+
+
+# --------------------------------------------------------------- async
+def test_async_faster_than_sync():
+    dm = DelayModel(n_clients=10, hetero=1.0, seed=3)
+    t_sync, a_sync = simulate("sync", 50, dm)
+    t_async, a_async = simulate("async", 50, dm, active_frac=0.5)
+    assert t_async[-1] < t_sync[-1]          # the straggler effect
+    assert a_sync.all()
+    assert (a_async.sum(1) == 5).all()
+
+
+@given(st.integers(2, 20), st.floats(0.1, 1.0))
+@settings(max_examples=15, deadline=None)
+def test_async_active_counts(C, frac):
+    dm = DelayModel(n_clients=C, seed=0)
+    _, active = simulate("async", 10, dm, active_frac=frac)
+    s = max(1, int(round(C * frac)))
+    assert (active.sum(1) == s).all()
+
+
+def test_times_monotone():
+    dm = DelayModel(n_clients=6, seed=1)
+    for mode in ("sync", "async"):
+        t, _ = simulate(mode, 30, dm)
+        assert (np.diff(t) > 0).all()

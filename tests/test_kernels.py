@@ -1,0 +1,99 @@
+"""Per-kernel allclose vs the ref.py oracles across shape/dtype sweeps
+(interpret=True executes the kernel body on CPU; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("D", [128, 1024, 5000, 8193])
+@pytest.mark.parametrize("C", [2, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sign_agg(D, C, dtype):
+    key = jax.random.PRNGKey(D + C)
+    z = jax.random.normal(key, (D,), dtype)
+    W = jax.random.normal(jax.random.fold_in(key, 1), (C, D), dtype)
+    phi = (jax.random.normal(jax.random.fold_in(key, 2), (D,)) * 0.01
+           ).astype(dtype)
+    got = ops.sign_agg(z, W, phi, 0.005, 0.01, impl="interpret")
+    want = ref.sign_agg_ref(z, W, phi, 0.005, 0.01)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("S,H,Hkv,Dh", [(128, 4, 2, 64), (256, 2, 2, 128),
+                                        (256, 6, 2, 64)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention(S, H, Hkv, Dh, causal, window):
+    key = jax.random.PRNGKey(S + H)
+    B = 2
+    q = jax.random.normal(key, (B, S, H, Dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, Dh))
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              impl="interpret", bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 128, 4, 64), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 2, 64), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 64), dtype)
+    got = ops.flash_attention(q, k, v, impl="interpret", bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("L,H,Hkv,Dh,bl", [(256, 4, 2, 64, 64),
+                                           (512, 8, 8, 128, 128),
+                                           (1024, 2, 1, 64, 256)])
+def test_decode_attention(L, H, Hkv, Dh, bl):
+    key = jax.random.PRNGKey(L)
+    B = 3
+    q = jax.random.normal(key, (B, H, Dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, L, Hkv, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, L, Hkv, Dh))
+    length = jnp.array([1, L // 2, L], jnp.int32)
+    got = ops.decode_attention(q, k, v, length, impl="interpret", bl=bl)
+    want = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("S,D,N,chunk,bd", [(128, 64, 8, 32, 32),
+                                            (256, 256, 16, 64, 128),
+                                            (64, 128, 4, 64, 64)])
+def test_ssm_scan(S, D, N, chunk, bd):
+    key = jax.random.PRNGKey(S + D)
+    B = 2
+    a = jax.random.uniform(key, (B, S, D, N), minval=0.2, maxval=0.999)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (B, S, D, N)) * 0.1
+    got = ops.ssm_scan(a, b, impl="interpret", chunk=chunk, bd=bd)
+    want = ref.ssm_scan_ref(a, b, jnp.zeros((B, D, N)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sign_agg_bounded_influence():
+    """The RSA property: one client's arbitrary corruption moves the update
+    by at most psi*alpha/C per coordinate."""
+    key = jax.random.PRNGKey(7)
+    D, C, psi, a = 512, 8, 0.01, 0.1
+    z = jax.random.normal(key, (D,))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (C, D))
+    phi = jnp.zeros((D,))
+    base = ref.sign_agg_ref(z, W, phi, psi, a)
+    W_evil = W.at[0].set(1e9)
+    evil = ref.sign_agg_ref(z, W_evil, phi, psi, a)
+    assert float(jnp.max(jnp.abs(evil - base))) <= 2 * psi * a / C + 1e-6

@@ -1,0 +1,161 @@
+"""Sharding-rule invariants (every placed axis divides its dim, for every
+arch) and HLO-parser correctness (trip-count multiplication, dot FLOPs,
+collective byte extraction)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, INPUT_SHAPES, FedConfig, reduce_for_smoke
+from repro.distributed.sharding import make_plan
+from repro.launch import steps as steps_lib
+from repro.roofline import hlo_parse
+
+
+class FakeMesh:
+    """Mesh stand-in with production axis sizes (no devices needed for
+    spec computation)."""
+    def __init__(self, multi=False):
+        self.axis_names = ("pod", "data", "model") if multi else ("data",
+                                                                  "model")
+        shape = (2, 16, 16) if multi else (16, 16)
+
+        class _D:
+            pass
+        self.devices = np.empty(shape, object)
+
+
+def _axis_size(mesh, name):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= sizes.get(n, 1)
+        return out
+    return sizes.get(name, 1)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("multi", [False, True])
+def test_param_specs_divisible(arch, multi):
+    cfg = ARCHS[arch]
+    mesh = FakeMesh(multi)
+    plan = make_plan(cfg, mesh)
+    fed = steps_lib.fed_config_for(cfg, plan.n_clients)
+    sds = steps_lib.fed_state_struct(cfg, fed)
+    specs = plan.fed_state_specs(sds)
+
+    def check(path, leaf, spec):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            size = _axis_size(mesh, ax)
+            assert leaf.shape[dim] % size == 0, (
+                arch, jax.tree_util.keystr(path), leaf.shape, dim, ax)
+
+    jax.tree_util.tree_map_with_path(check, sds, specs,
+                                     is_leaf=lambda x: False)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "llama3-405b",
+                                  "olmoe-1b-7b", "xlstm-1.3b"])
+@pytest.mark.parametrize("shape", ["decode_32k", "long_500k"])
+def test_decode_specs_divisible(arch, shape):
+    cfg = ARCHS[arch]
+    mesh = FakeMesh(False)
+    plan = make_plan(cfg, mesh)
+    sh = INPUT_SHAPES[shape]
+    window = steps_lib.decode_window(cfg, sh)
+    from repro.models import transformer as tr
+    state_sds = jax.eval_shape(
+        lambda: tr.init_decode_state(cfg, sh.global_batch, sh.seq_len,
+                                     jnp.bfloat16, window=window))
+    specs = plan.decode_state_specs(state_sds, sh.global_batch)
+
+    def check(path, leaf, spec):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            size = _axis_size(mesh, ax)
+            assert leaf.shape[dim] % size == 0, (
+                arch, jax.tree_util.keystr(path), leaf.shape, dim, ax)
+
+    jax.tree_util.tree_map_with_path(check, state_sds, specs,
+                                     is_leaf=lambda x: False)
+
+
+def test_fed_modes():
+    assert make_plan(ARCHS["smollm-360m"], FakeMesh(False)).n_clients == 16
+    assert make_plan(ARCHS["smollm-360m"], FakeMesh(True)).n_clients == 32
+    assert make_plan(ARCHS["llama3-405b"], FakeMesh(False)).n_clients == 1
+    assert make_plan(ARCHS["llama3-405b"], FakeMesh(True)).n_clients == 2
+
+
+# ------------------------------------------------------------- HLO parser
+def test_trip_count_correction():
+    def body(x, _):
+        return x @ x, None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=17)
+        return y
+
+    n = 64
+    compiled = jax.jit(f).lower(jnp.ones((n, n))).compile()
+    tot = hlo_parse.totals(compiled.as_text())
+    expect = 17 * 2 * n ** 3
+    assert tot.dot_flops == pytest.approx(expect, rel=0.01), (
+        tot.dot_flops, expect)
+    ca = compiled.cost_analysis()
+    assert ca["flops"] == pytest.approx(expect / 17, rel=0.01)
+
+
+def test_dot_flops_plain():
+    m, k, n = 32, 48, 80
+    f = lambda a, b: a @ b
+    compiled = jax.jit(f).lower(jnp.ones((m, k)), jnp.ones((k, n))).compile()
+    tot = hlo_parse.totals(compiled.as_text())
+    assert tot.dot_flops == pytest.approx(2 * m * k * n, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    def inner(x, _):
+        return x @ x, None
+
+    def outer(x, _):
+        y, _ = jax.lax.scan(inner, x, None, length=5)
+        return y, None
+
+    def f(x):
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    n = 16
+    compiled = jax.jit(f).lower(jnp.ones((n, n))).compile()
+    tot = hlo_parse.totals(compiled.as_text())
+    assert tot.dot_flops == pytest.approx(15 * 2 * n ** 3, rel=0.01)
+
+
+CANNED_HLO = """
+HloModule test
+
+ENTRY %main (p0: f32[1024,256]) -> f32[1024,256] {
+  %p0 = f32[1024,256]{1,0} parameter(0)
+  %ar = f32[1024,256]{1,0} all-reduce(%p0), replica_groups=[2,8]<=[16], to_apply=%add
+  %ag = f32[2048,256]{1,0} all-gather(%ar), replica_groups={{0,1},{2,3}}, dimensions={0}
+  ROOT %out = f32[1024,256]{1,0} slice(%ag), slice={[0:1024], [0:256]}
+}
+"""
+
+
+def test_collective_bytes_from_text():
+    tot = hlo_parse.totals(CANNED_HLO, entry="main")
+    assert tot.collective_bytes["all-reduce"] == 1024 * 256 * 4
+    assert tot.collective_bytes["all-gather"] == 1024 * 256 * 4
+    assert tot.total_collective_bytes == 2 * 1024 * 256 * 4
+
+
+def test_shape_info_tuples():
+    b, shapes = hlo_parse.shape_info("(s32[], f32[8,4]{1,0}, bf16[2,2])")
+    assert b == 4 + 8 * 4 * 4 + 2 * 2 * 2
+    assert [8, 4] in shapes

@@ -1,0 +1,133 @@
+"""Perf-variant correctness: the optimized paths must compute the same
+thing as the baselines (einsum MoE vs scatter MoE, chunkwise vs sequential
+mLSTM, int8 vs f32 sign consensus, off-round structure)."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, FedConfig, MLP_H1, reduce_for_smoke
+from repro.core import bafdp, init_fed_state
+from repro.core.byzantine import byz_mask
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.forecasting import init_forecaster, mse_loss
+
+
+def test_einsum_moe_matches_scatter():
+    import repro.models.moe as M
+    old = M.GROUP_SIZE
+    try:
+        M.GROUP_SIZE = 32
+        cfg = reduce_for_smoke(ARCHS["granite-moe-3b-a800m"])
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+        params = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.5
+        y1, _ = moe_lib.moe_ffn(params, x, cfg)
+        y2, _ = moe_lib.moe_ffn_einsum(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)
+    finally:
+        M.GROUP_SIZE = old
+
+
+def test_einsum_moe_capacity_drop_consistent():
+    """When capacity overflows, dropped tokens produce zero update in both
+    impls (same keep rule within a group)."""
+    import repro.models.moe as M
+    old = M.GROUP_SIZE
+    try:
+        M.GROUP_SIZE = 128     # single group -> identical cumsum order
+        cfg = reduce_for_smoke(ARCHS["olmoe-1b-7b"])
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.5))
+        params = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 128, cfg.d_model))
+        y1, _ = moe_lib.moe_ffn(params, x, cfg)
+        y2, _ = moe_lib.moe_ffn_einsum(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)
+    finally:
+        M.GROUP_SIZE = old
+
+
+@pytest.mark.parametrize("chunk", [8, 32])
+def test_mlstm_chunkwise_matches_sequential(chunk):
+    import repro.models.ssm as S
+    old = S.MLSTM_CHUNK
+    try:
+        S.MLSTM_CHUNK = chunk
+        cfg = reduce_for_smoke(ARCHS["xlstm-1.3b"])
+        params = ssm_lib.init_mlstm(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.5
+        par = ssm_lib.mlstm_scan(params, x, cfg)
+        seq = ssm_lib.mlstm_scan_sequential(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(par), np.asarray(seq),
+                                   rtol=3e-4, atol=3e-4)
+    finally:
+        S.MLSTM_CHUNK = old
+
+
+def _round_fn(fed, key):
+    cfg = MLP_H1
+
+    def local_loss(p, b, k, eps):
+        x, y = b
+        return mse_loss(p, x, y, cfg)
+
+    state = init_fed_state(key, lambda k: init_forecaster(k, cfg), fed)
+    step = jax.jit(functools.partial(
+        bafdp.bafdp_round, local_loss=local_loss, fed=fed, c3=1.0,
+        n_samples=100, d_dim=cfg.d_x + cfg.d_y,
+        byz_mask=byz_mask(fed.n_clients, fed.n_byzantine)))
+    X = jax.random.normal(key, (fed.n_clients, 8, cfg.d_x))
+    Y = jnp.sum(X[..., :2], -1, keepdims=True)
+    return state, step, (X, Y)
+
+
+def test_int8_signs_lossless_sum():
+    """compress_signs must not change the consensus trajectory: the int8
+    sign SUM is exact (|sum| <= C < 128); only the final mean division may
+    differ by one ulp (sum/C vs sum*(1/C))."""
+    key = jax.random.PRNGKey(3)
+    outs = []
+    for compress in (False, True):
+        fed = FedConfig(n_clients=6, active_frac=1.0, attack="none",
+                        compress_signs=compress)
+        state, step, batch = _round_fn(fed, key)
+        for t in range(5):
+            state, _ = step(state, batch, jax.random.fold_in(key, t))
+        outs.append(np.concatenate([np.asarray(l).ravel()
+                                    for l in jax.tree.leaves(state.z)]))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=0, atol=1e-6)
+
+
+def test_offround_freezes_consensus():
+    key = jax.random.PRNGKey(4)
+    fed = FedConfig(n_clients=4, active_frac=1.0, local_steps=0)
+    state, step, batch = _round_fn(fed, key)
+    z0 = np.concatenate([np.asarray(l).ravel()
+                         for l in jax.tree.leaves(state.z)])
+    w0 = np.asarray(jax.tree.leaves(state.W)[0])
+    state, _ = step(state, batch, key)
+    z1 = np.concatenate([np.asarray(l).ravel()
+                         for l in jax.tree.leaves(state.z)])
+    w1 = np.asarray(jax.tree.leaves(state.W)[0])
+    np.testing.assert_array_equal(z0, z1)        # consensus untouched
+    assert not np.allclose(w0, w1)               # but clients trained
+
+
+def test_variants_registry_applies():
+    from repro.launch.variants import VARIANTS
+    cfg = ARCHS["granite-moe-3b-a800m"]
+    v = VARIANTS["einsum_moe_gshard"]
+    cfg2, fed2, kw = v.apply(cfg)
+    assert cfg2.moe_impl == "einsum" and cfg2.moe_group_shard
+    assert kw == {"inner_dp": False}
+    v = VARIANTS["inner_dp+signs8"]
+    cfg3, fed3, kw = v.apply(ARCHS["smollm-360m"])
+    assert kw == {"inner_dp": True} and fed3.compress_signs
