@@ -40,8 +40,26 @@ METHODS = {
     "NbAFL": ("nbafl", "mlp", 0.01),
     "RSA": ("rsa", "mlp", 0.0),
     "DP-RSA": ("dp_rsa", "mlp", 0.01),
+    "FedAsync": ("fedasync", "mlp", 0.0),
     "BAFDP": ("bafdp", "mlp", 0.0),
 }
+
+
+def _check_masks(active_masks, rounds: int, n_clients: int):
+    """An external schedule must cover every trained round — recycling masks
+    would silently decouple training from the simulator's timestamps, the
+    exact mismatch the mask plumbing exists to eliminate."""
+    if active_masks is None:
+        return None
+    masks = jnp.asarray(np.asarray(active_masks), bool)
+    if masks.ndim != 2 or masks.shape[1] != n_clients:
+        raise ValueError(
+            f"active_masks must be (rounds, {n_clients}), got {masks.shape}")
+    if masks.shape[0] < rounds:
+        raise ValueError(
+            f"active_masks covers {masks.shape[0]} rounds < {rounds} trained;"
+            " simulate() the full horizon instead of recycling a schedule")
+    return masks
 
 
 def forecast_cfg(model: str, horizon: int) -> ForecastConfig:
@@ -90,6 +108,11 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
                 optimizer: str = "adam"):
     """Returns (state, cfg, history dict).
 
+    ``active_masks`` (rounds, C) bool feeds an external event-driven
+    schedule (``core/async_engine.simulate().active``) into every round, so
+    training dynamics match the simulator's wall-clock bookkeeping; ``None``
+    keeps the internal uniformly-random sampler.
+
     Experimental setting per the paper Sec. V-D: Adam on the data/DRO
     gradient; grid-searched DRO scale (see FedConfig.dro_weight)."""
     fed = dataclasses.replace(fed, omega_optimizer=optimizer,
@@ -108,12 +131,14 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
         bafdp.bafdp_round, local_loss=local_loss, fed=fed, c3=c3,
         n_samples=train["x"].shape[1], d_dim=cfg.d_x + cfg.d_y,
         byz_mask=byz_mask(fed.n_clients, fed.n_byzantine)))
+    masks = _check_masks(active_masks, rounds, fed.n_clients)
     rng = np.random.RandomState(seed)
     hist: Dict[str, List[float]] = {k: [] for k in collect}
     for t in range(rounds):
         x, y = client_batches(rng, train, BATCH)
+        kwargs = {} if masks is None else {"act": masks[t]}
         state, m = step(state, (jnp.asarray(x), jnp.asarray(y)),
-                        jax.random.fold_in(key, t))
+                        jax.random.fold_in(key, t), **kwargs)
         for k in collect:
             if k == "eps_all":
                 hist[k].append(np.asarray(state.eps).copy())
@@ -130,7 +155,8 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
 
 def train_baseline(method: str, dataset: str, horizon: int, fed: FedConfig,
                    rounds: int = ROUNDS, seed: int = 0,
-                   collect: Tuple[str, ...] = ()):
+                   collect: Tuple[str, ...] = (),
+                   active_masks: Optional[np.ndarray] = None):
     trainer_kind, backbone, dp_sigma = METHODS[method]
     assert trainer_kind != "bafdp"
     cfg = forecast_cfg(backbone, horizon)
@@ -146,15 +172,17 @@ def train_baseline(method: str, dataset: str, horizon: int, fed: FedConfig,
                          dp_sigma=dp_sigma)
     st = tr.init(init_forecaster(key, cfg))
     step = tr.jitted_round()
+    masks = _check_masks(active_masks, rounds, fed.n_clients)
     rng = np.random.RandomState(seed)
     hist: Dict[str, List[float]] = {k: [] for k in collect}
     for t in range(rounds):
         x, y = client_batches(rng, train, BATCH)
+        kwargs = {} if masks is None else {"act": masks[t]}
         st, m = step(st, (jnp.asarray(x), jnp.asarray(y)),
-                     jax.random.fold_in(key, t))
+                     jax.random.fold_in(key, t), **kwargs)
         for k in collect:
-            if k == "loss":
-                hist[k].append(float(m["loss"]))
+            if k in m:
+                hist[k].append(float(m[k]))
     return st["server"], cfg, (test, scalers), hist
 
 

@@ -1,37 +1,53 @@
 """Figs. 4-6: synchronous (BSFDP) vs asynchronous (BAFDP) training —
 loss / RMSE / MAE against simulated wall-clock with heterogeneous client
-latencies (core/async_engine.py provides the event-time model)."""
+latencies.
+
+``core/async_engine.simulate`` produces one event-driven schedule per mode
+(wall-clock timestamps + per-round active masks + staleness vectors) and the
+*same* masks are fed into ``train_bafdp`` — so the loss-vs-time curves and
+the timestamps they are plotted against come from a single schedule, not two
+unrelated ones.  ``with_meta=True`` additionally returns per-dataset
+metadata (the masks, staleness, and per-round ``n_active`` the training loop
+actually saw) so tests can assert the consistency end to end.
+"""
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import Dict, List, Tuple, Union
 
 import numpy as np
 
-from benchmarks.common import ROUNDS, eval_rmse_mae, problem, train_bafdp
+from benchmarks.common import ROUNDS, train_bafdp
 from repro.configs import FedConfig
 from repro.core.async_engine import DelayModel, simulate
 
+ACTIVE_FRAC = 0.6
 
-def main(rounds: int = ROUNDS, quick: bool = False) -> List[str]:
-    rows = []
+
+def main(rounds: int = ROUNDS, quick: bool = False, with_meta: bool = False
+         ) -> Union[List[str], Tuple[List[str], List[Dict]]]:
+    rows, metas = [], []
     datasets = ("milano", "trento", "lte") if not quick else ("milano",)
     for dataset in datasets:
         t0 = time.time()
         n = 8
         dm = DelayModel(n_clients=n, hetero=1.0, seed=0)
-        t_async, _ = simulate("async", rounds, dm, active_frac=0.6)
-        t_sync, _ = simulate("sync", rounds, dm)
+        sim_async = simulate("async", rounds, dm, active_frac=ACTIVE_FRAC)
+        sim_sync = simulate("sync", rounds, dm, active_frac=1.0)
 
-        # sync = all clients active each round; async = S of M
-        fed_async = FedConfig(n_clients=n, active_frac=0.6)
+        # sync = all clients active each round; async = S of M — both train
+        # on the masks the simulator timestamped
+        fed_async = FedConfig(n_clients=n, active_frac=ACTIVE_FRAC)
         fed_sync = FedConfig(n_clients=n, active_frac=1.0)
         _, cfg, h_async = train_bafdp(dataset, 1, fed_async, rounds,
-                                      collect=("data_loss",))
+                                      active_masks=sim_async.active,
+                                      collect=("data_loss", "n_active"))
         _, _, h_sync = train_bafdp(dataset, 1, fed_sync, rounds,
-                                   collect=("data_loss",))
+                                   active_masks=sim_sync.active,
+                                   collect=("data_loss", "n_active"))
         la, ls = np.asarray(h_async["data_loss"]), np.asarray(
             h_sync["data_loss"])
+        t_async, t_sync = sim_async.times, sim_sync.times
         target = max(np.nanmin(ls), np.nanmin(la)) * 1.1
 
         def t_to(loss, t):
@@ -44,6 +60,17 @@ def main(rounds: int = ROUNDS, quick: bool = False) -> List[str]:
             f"fig456/{dataset},{us:.1f},t_async_s={ta:.1f};t_sync_s={ts:.1f};"
             f"speedup={ts / ta if np.isfinite(ta) and ta > 0 else float('nan'):.2f};"
             f"final_loss_async={la[-1]:.4f};final_loss_sync={ls[-1]:.4f}")
+        metas.append({
+            "dataset": dataset,
+            "masks_async": sim_async.active,
+            "masks_sync": sim_sync.active,
+            "staleness_async": sim_async.staleness,
+            "n_active_async": np.asarray(h_async["n_active"]),
+            "n_active_sync": np.asarray(h_sync["n_active"]),
+            "active_frac": ACTIVE_FRAC,
+        })
+    if with_meta:
+        return rows, metas
     return rows
 
 

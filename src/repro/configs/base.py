@@ -211,6 +211,17 @@ class FedConfig:
     adam_b1: float = 0.9
     adam_b2: float = 0.999
     adam_eps: float = 1e-8
+    # staleness-aware asynchrony (FedAsync-style, arXiv:1903.03934).  Each
+    # client's contribution to the Eq. (20) sign sum and its Eq. (22) dual
+    # step is scaled by s(t - tau_i), where tau_i is its last-participation
+    # round (Definition 2's t-hat, tracked in FedState.tau):
+    #   constant: s = 1                       (seed behaviour, no decay)
+    #   hinge:    s = 1 if d <= b else 1/(a (d - b) + 1)
+    #   poly:     s = (d + 1)^-a
+    staleness_decay: str = "constant"   # constant | hinge | poly
+    staleness_hinge_a: float = 10.0
+    staleness_hinge_b: float = 4.0
+    staleness_poly_a: float = 0.5
     # beyond-paper knobs
     local_steps: int = 1           # K local steps between consensus rounds
     compress_signs: bool = False   # int8 sign-compressed consensus collective

@@ -4,22 +4,29 @@ TPU SPMD is bulk-synchronous, and the paper's own experiments simulate the
 client fleet too — so wall-clock comparisons of BSFDP (sync) vs BAFDP
 (async) come from an event-driven timing model:
 
-* every client has a base compute latency (heterogeneous, lognormal) plus
-  per-round jitter and a communication latency;
-* **sync**: every round waits for the slowest participating client
+* every client has a base compute latency (heterogeneous, lognormal by
+  default, optionally Pareto heavy-tailed) plus per-round jitter, a
+  communication latency, and optional bursty-straggler spikes;
+* clients may drop out of the fleet and rejoin later (``dropout_prob`` /
+  ``rejoin_prob``); a dropped client is never activated;
+* **sync**: every round waits for the slowest available client
   (the "straggler" effect the paper describes);
-* **async**: the server proceeds once the fastest S clients of the round
-  have arrived; slower clients keep computing and deliver stale updates at
-  their own completion times (matching Definition 2's t-hat bookkeeping).
+* **async**: the server proceeds once the fastest S available clients of
+  the round have arrived; slower clients keep computing and deliver stale
+  updates at their own completion times (Definition 2's t-hat bookkeeping).
 
-``simulate`` returns per-round wall-clock timestamps and active masks; the
-benchmark feeds the masks into the training loop so the loss-vs-time curves
-in Figs. 4-6 use *consistent* activity patterns.
+``simulate`` returns a :class:`SimResult` with per-round wall-clock
+timestamps, active masks, per-round staleness vectors (``t - tau_i``, 0 on
+the round a client participates), and the availability matrix.
+``benchmarks/fig456_async_efficiency.py`` feeds ``SimResult.active`` into
+``bafdp_round`` via ``benchmarks/common.train_bafdp(active_masks=...)``, so
+the loss-vs-wall-clock curves in Figs. 4-6 train on the *same* event-driven
+schedule that produced their timestamps.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import numpy as np
 
@@ -32,6 +39,13 @@ class DelayModel:
     jitter: float = 0.2              # per-round lognormal sigma
     comm: float = 0.3                # up+down communication latency
     seed: int = 0
+    # scenario knobs -------------------------------------------------------
+    tail: str = "lognormal"          # lognormal | pareto (heavy-tailed jitter)
+    pareto_shape: float = 1.5        # smaller = heavier tail (must be > 0)
+    burst_prob: float = 0.0          # P(client is a bursty straggler, per round)
+    burst_scale: float = 10.0        # latency multiplier during a burst
+    dropout_prob: float = 0.0        # P(available client drops, per round)
+    rejoin_prob: float = 0.0         # P(dropped client rejoins, per round)
 
     def client_bases(self) -> np.ndarray:
         rng = np.random.RandomState(self.seed)
@@ -42,42 +56,96 @@ class DelayModel:
         """(n_rounds, C) per-round completion latencies."""
         rng = np.random.RandomState(self.seed + 1)
         base = self.client_bases()[None, :]
-        jit = np.exp(self.jitter * rng.randn(n_rounds, self.n_clients))
+        shape = (n_rounds, self.n_clients)
+        if self.tail == "pareto":
+            # heavy-tailed jitter: Lomax bumps (mean 1/(shape-1) for
+            # shape > 1, infinite mean for shape <= 1) give rare huge delays
+            jit = 1.0 + rng.pareto(self.pareto_shape, shape)
+        elif self.tail == "lognormal":
+            jit = np.exp(self.jitter * rng.randn(*shape))
+        else:
+            raise ValueError(f"unknown tail: {self.tail!r}")
+        if self.burst_prob > 0:
+            burst = rng.rand(*shape) < self.burst_prob
+            jit = np.where(burst, jit * self.burst_scale, jit)
         return base * jit + self.comm
+
+    def availability(self, n_rounds: int) -> np.ndarray:
+        """(n_rounds, C) bool — dropout/rejoin Markov chain, >= 1 available
+        per round (the fleet never goes completely dark)."""
+        rng = np.random.RandomState(self.seed + 2)
+        C = self.n_clients
+        avail = np.ones((n_rounds, C), bool)
+        if self.dropout_prob <= 0:
+            return avail
+        cur = np.ones(C, bool)
+        for r in range(n_rounds):
+            u = rng.rand(C)
+            drop = cur & (u < self.dropout_prob)
+            rejoin = ~cur & (u < self.rejoin_prob)
+            cur = (cur & ~drop) | rejoin
+            if not cur.any():
+                cur[rng.randint(C)] = True
+            avail[r] = cur
+        return avail
+
+
+class SimResult(NamedTuple):
+    times: np.ndarray        # (n_rounds,) wall-clock at round close
+    active: np.ndarray       # (n_rounds, C) bool participation masks
+    staleness: np.ndarray    # (n_rounds, C) int: r - tau_i (0 on participation)
+    available: np.ndarray    # (n_rounds, C) bool dropout/rejoin state
 
 
 def simulate(mode: str, n_rounds: int, delays: DelayModel,
-             active_frac: float = 0.6) -> Tuple[np.ndarray, np.ndarray]:
-    """Returns (times (n_rounds,), active (n_rounds, C) bool)."""
+             active_frac: float = 0.6) -> SimResult:
+    """Event-driven schedule for ``n_rounds`` federated rounds."""
     C = delays.n_clients
     d = delays.round_delays(n_rounds)
+    avail = delays.availability(n_rounds)
     s = max(1, int(round(C * active_frac)))
     times = np.zeros(n_rounds)
     active = np.zeros((n_rounds, C), bool)
+    staleness = np.zeros((n_rounds, C), np.int64)
+    last_part = np.zeros(C, np.int64)
     if mode == "sync":
-        # all clients participate; the round closes at the slowest client
+        # all available clients participate; the round closes at the slowest
         t = 0.0
         for r in range(n_rounds):
-            t += d[r].max()
+            part = avail[r]
+            t += d[r][part].max()
             times[r] = t
-            active[r] = True
-        return times, active
+            active[r] = part
+            last_part[part] = r
+            staleness[r] = r - last_part
+        return SimResult(times, active, staleness, avail)
     if mode != "async":
         raise ValueError(mode)
     # async: each client runs its own clock; the server closes a round when
-    # S results have arrived.  next_free[i] = when client i can start anew.
+    # S results have arrived.  next_done[i] = when client i's result lands.
     next_done = d[0].copy()
+    was_avail = np.ones(C, bool)
     t = 0.0
     for r in range(n_rounds):
-        order = np.argsort(next_done)
-        winners = order[:s]
-        t = next_done[winners].max()
+        # a rejoining client starts a fresh local round now — its pre-dropout
+        # completion time is void
+        rejoined = avail[r] & ~was_avail
+        if rejoined.any():
+            next_done[rejoined] = t + d[r][rejoined]
+        was_avail = avail[r]
+        cand = np.flatnonzero(avail[r])
+        k = min(s, cand.size)
+        order = cand[np.argsort(next_done[cand], kind="stable")]
+        winners = order[:k]
+        t = max(t, next_done[winners].max())
         times[r] = t
         active[r, winners] = True
+        last_part[winners] = r
+        staleness[r] = r - last_part
         # winners immediately start their next local round
         nxt = d[min(r + 1, n_rounds - 1)]
         next_done[winners] = t + nxt[winners]
-    return times, active
+    return SimResult(times, active, staleness, avail)
 
 
 def speedup_at(loss_sync: np.ndarray, t_sync: np.ndarray,

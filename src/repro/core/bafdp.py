@@ -13,6 +13,10 @@ Faithful pieces:
   * Asynchrony: an active mask (S of M) freezes inactive clients; the server
     consumes their stale ``w_i`` exactly as Algorithm 1 does; active clients
     sync ``z_local`` only when activated (staleness is real, not cosmetic).
+    The mask may be supplied externally (event-driven schedules from
+    ``core/async_engine``); per-client staleness ``t - tau_i`` (Definition
+    2's t-hat) is tracked in ``FedState.tau`` and can down-weight stale
+    contributions via FedAsync-style decay (``FedConfig.staleness_decay``).
 
 Beyond-paper options (recorded separately in EXPERIMENTS.md Section Perf):
 ``local_steps`` K>1 (consensus every K rounds) and ``compress_signs`` (int8
@@ -49,6 +53,25 @@ def active_mask(key, n_clients: int, active_frac: float) -> jnp.ndarray:
     return rank < s
 
 
+def staleness_weights(stale, fed: FedConfig) -> jnp.ndarray:
+    """FedAsync staleness decay s(d), d = t - tau_i (arXiv:1903.03934 Sec 5.2).
+
+    ``constant`` is exactly 1 (seed behaviour); ``hinge`` keeps full weight
+    up to ``staleness_hinge_b`` rounds then decays as 1/(a (d - b) + 1);
+    ``poly`` decays as (d + 1)^-a.
+    """
+    d = jnp.maximum(stale.astype(jnp.float32), 0.0)
+    if fed.staleness_decay == "constant":
+        return jnp.ones_like(d)
+    if fed.staleness_decay == "hinge":
+        # s = 1/(a (d - b) + 1) for d > b: continuous at d = b (AFO Sec 5.2)
+        a, b = fed.staleness_hinge_a, fed.staleness_hinge_b
+        return jnp.where(d <= b, 1.0, 1.0 / (a * (d - b) + 1.0))
+    if fed.staleness_decay == "poly":
+        return jnp.power(d + 1.0, -fed.staleness_poly_a)
+    raise ValueError(f"unknown staleness_decay: {fed.staleness_decay!r}")
+
+
 def _per_client_objective(local_loss: LocalLoss, fed: FedConfig, c3: float,
                           n_samples: int, d_dim: int):
     """Builds f(w_i, batch_i, key_i, eps_i, z_i, phi_i) = the differentiable
@@ -65,12 +88,38 @@ def _per_client_objective(local_loss: LocalLoss, fed: FedConfig, c3: float,
 
 def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
                 fed: FedConfig, c3: float, n_samples: int, d_dim: int,
-                byz_mask: jnp.ndarray) -> Tuple[FedState, Dict[str, jnp.ndarray]]:
-    """One asynchronous BAFDP round. ``batch`` leaves: (C, b, ...)."""
+                byz_mask: jnp.ndarray, act: Any = None,
+                stale: Any = None) -> Tuple[FedState, Dict[str, jnp.ndarray]]:
+    """One asynchronous BAFDP round. ``batch`` leaves: (C, b, ...).
+
+    ``act`` (C,) bool: externally supplied active set — e.g. the event-driven
+    schedule from :mod:`repro.core.async_engine` — so training dynamics and
+    wall-clock bookkeeping share one schedule.  ``None`` falls back to the
+    internal uniformly-random sampler (seed behaviour).  ``stale`` (C,)
+    overrides the staleness vector weighting the Eq. (20) sign sum; by
+    default it is the age of the parameters the server consumes this round —
+    0 for clients active now, ``t - tau_i`` (Definition 2's t - t-hat) for
+    the frozen params of inactive ones — matching ``SimResult.staleness``.
+    The Eq. (22) dual step is instead damped by each *returning* client's
+    absence length ``t - state.tau`` (always from the internal bookkeeping,
+    since the consumption-age vector is 0 wherever that step applies).
+    """
+    if fed.compress_signs and fed.staleness_decay != "constant":
+        raise ValueError(
+            "compress_signs requires staleness_decay='constant': the int8 "
+            "sign all-reduce is unweighted, so a decayed sum cannot use it")
     C = byz_mask.shape[0]
     k_act, k_noise, k_byz = jax.random.split(key, 3)
-    act = active_mask(k_act, C, fed.active_frac)              # (C,) bool
+    if act is None:
+        act = active_mask(k_act, C, fed.active_frac)          # (C,) bool
+    else:
+        act = jnp.asarray(act).astype(bool)
     t = state.t
+    tau_new = jnp.where(act, t, state.tau)
+    stale_v = (t - tau_new).astype(jnp.float32) if stale is None \
+        else jnp.asarray(stale).astype(jnp.float32)
+    s_w = staleness_weights(stale_v, fed)                     # (C,) in (0, 1]
+    s_w_dual = staleness_weights((t - state.tau).astype(jnp.float32), fed)
 
     # ---------------- Step 1: active clients update (w_i, eps_i) ----------
     obj = _per_client_objective(local_loss, fed, c3, n_samples, d_dim)
@@ -177,7 +226,7 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
             (eps_new - fed.privacy_budget_a) - a1_t * state.lam), 0.0)
         new_state = FedState(W=W_new, z=state.z, z_local=state.z_local,
                              phi=state.phi, lam=lam_new, eps=eps_new,
-                             t=t + 1, opt=new_opt)
+                             t=t + 1, opt=new_opt, tau=tau_new)
         metrics = {
             "loss": jnp.sum(loss_i * act) / jnp.maximum(jnp.sum(act), 1),
             "data_loss": jnp.sum(g_i * act) / jnp.maximum(jnp.sum(act), 1),
@@ -186,6 +235,8 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
             "lambda_mean": jnp.mean(lam_new),
             "consensus_gap": jnp.zeros(()),
             "n_active": jnp.sum(act),
+            "staleness_mean": jnp.mean(stale_v),
+            "staleness_weight_mean": jnp.mean(s_w),
         }
         return new_state, metrics
 
@@ -193,10 +244,17 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
 
     def z_step(z_l, w_l, phi_l):
         sgn = jnp.sign(z_l[None].astype(jnp.float32) - w_l.astype(jnp.float32))
-        if fed.compress_signs:
+        if fed.staleness_decay != "constant":
+            # FedAsync-style decay: client i's sign message enters the
+            # Eq. (20) sum scaled by s(t - tau_i), so the frozen params of
+            # long-inactive clients pull the consensus less.
+            sw = s_w.reshape((-1,) + (1,) * (sgn.ndim - 1))
+            sign_sum = jnp.sum(sgn * sw, axis=0) / C
+        elif fed.compress_signs:
             # beyond-paper: the cross-client reduction runs on int8 signs
             # (|sum| <= C < 128), so the all-reduce moves 1 byte/coordinate
             # instead of 4 — RSA's bounded messages make this lossless.
+            # (requires the unweighted sum, hence constant decay only)
             sign_sum = jnp.sum(sgn.astype(jnp.int8), axis=0,
                                dtype=jnp.int8).astype(jnp.float32) / C
         else:
@@ -219,6 +277,12 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     def phi_step(phi_l, z_l, w_l):
         upd = (z_l[None].astype(jnp.float32) - w_l.astype(jnp.float32)) \
             - a2_t * phi_l.astype(jnp.float32)
+        if fed.staleness_decay != "constant":
+            # Eq. (22) dual step damped by s(t - tau_i) with tau from BEFORE
+            # this round: a client returning after a long absence takes a
+            # smaller pairwise-dual step, since its w_i lags the consensus
+            # it is being coupled to.
+            upd = upd * s_w_dual.reshape((-1,) + (1,) * (phi_l.ndim - 1))
         new = phi_l.astype(jnp.float32) + fed.alpha_phi * upd
         m = act.reshape((-1,) + (1,) * (phi_l.ndim - 1))
         return jnp.where(m, new, phi_l.astype(jnp.float32)).astype(phi_l.dtype)
@@ -233,7 +297,8 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     z_local_new = jax.tree.map(zsync, state.z_local, z_new)
 
     new_state = FedState(W=W_new, z=z_new, z_local=z_local_new, phi=phi_new,
-                         lam=lam_new, eps=eps_new, t=t + 1, opt=new_opt)
+                         lam=lam_new, eps=eps_new, t=t + 1, opt=new_opt,
+                         tau=tau_new)
     metrics = {
         "loss": jnp.sum(loss_i * act) / jnp.maximum(jnp.sum(act), 1),
         "data_loss": jnp.sum(g_i * act) / jnp.maximum(jnp.sum(act), 1),
@@ -242,6 +307,8 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
         "lambda_mean": jnp.mean(lam_new),
         "consensus_gap": consensus_gap(new_state),
         "n_active": jnp.sum(act),
+        "staleness_mean": jnp.mean(stale_v),
+        "staleness_weight_mean": jnp.mean(s_w),
     }
     return new_state, metrics
 

@@ -23,6 +23,9 @@ class FedState(NamedTuple):
     eps: jnp.ndarray       # (C,) privacy levels
     t: jnp.ndarray         # scalar round counter
     opt: Any               # optional optimizer state for W (adam m, v)
+    tau: jnp.ndarray       # (C,) last-participation round (Definition 2's
+                           # t-hat); staleness of client i at round t is
+                           # t - tau_i
 
 
 def init_fed_state(key, init_params: Callable[[Any], Any],
@@ -43,7 +46,8 @@ def init_fed_state(key, init_params: Callable[[Any], Any],
                "v": jax.tree.map(jnp.zeros_like, W),
                "count": jnp.zeros((C,), jnp.int32)}
     return FedState(W=W, z=z, z_local=z_local, phi=phi, lam=lam, eps=eps,
-                    t=jnp.zeros((), jnp.int32), opt=opt)
+                    t=jnp.zeros((), jnp.int32), opt=opt,
+                    tau=jnp.zeros((C,), jnp.int32))
 
 
 def consensus_gap(state: FedState) -> jnp.ndarray:

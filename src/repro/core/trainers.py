@@ -1,10 +1,13 @@
 """Federated baseline trainers (Section V-B): FedGRU / Fed-NTP (FedAvg),
 FedProx, FedAtt, FedDA, AFL, ASPIRE-EASE (simplified), UDP, NbAFL, RSA,
-DP-RSA — all as round functions over stacked client pytrees, sharing one
-local-update kernel so comparisons are apples-to-apples.
+DP-RSA, FedAsync (AFO, arXiv:1903.03934) — all as round functions over
+stacked client pytrees, sharing one local-update kernel so comparisons are
+apples-to-apples.
 
-Each trainer:  round(server_state, batch, key) -> (server_state, metrics)
-with batch leaves (C, b, ...).
+Each trainer:  round(server_state, batch, key, act=None) -> (state, metrics)
+with batch leaves (C, b, ...).  ``act`` optionally supplies an external
+(C,) participation mask — e.g. an event-driven schedule from
+``core/async_engine`` — instead of the internal uniform sampler.
 """
 from __future__ import annotations
 
@@ -18,7 +21,7 @@ import jax.numpy as jnp
 from repro.configs.base import FedConfig
 from repro.core import aggregators as agg
 from repro.core import byzantine as byz_lib
-from repro.core.bafdp import active_mask
+from repro.core.bafdp import active_mask, staleness_weights
 
 # loss(params, batch_i, key) -> scalar
 Loss = Callable[[Any, Any, jnp.ndarray], jnp.ndarray]
@@ -63,6 +66,7 @@ class BaselineTrainer:
     dp_sigma: float = 0.0         # UDP / NbAFL / DP-RSA noise scale
     psi: float = 5e-3             # RSA penalty
     aggregator: str = "fedavg"
+    async_alpha: float = 0.6      # FedAsync mixing rate (AFO's alpha)
 
     def init(self, params) -> BaselineState:
         st = {"server": params, "t": jnp.zeros((), jnp.int32)}
@@ -71,14 +75,19 @@ class BaselineTrainer:
                                1.0 / self.fed.n_clients)
         if self.method == "fedda":
             st["quasi"] = params
+        if self.method == "fedasync":
+            st["tau"] = jnp.zeros((self.fed.n_clients,), jnp.int32)
         return st
 
-    def round(self, st: BaselineState, batch, key
+    def round(self, st: BaselineState, batch, key, act=None
               ) -> Tuple[BaselineState, Dict[str, jnp.ndarray]]:
         fed = self.fed
         C = fed.n_clients
         k_act, k_loc, k_byz, k_dp = jax.random.split(key, 4)
-        act = active_mask(k_act, C, fed.active_frac)
+        if act is None:
+            act = active_mask(k_act, C, fed.active_frac)
+        else:
+            act = jnp.asarray(act).astype(bool)
         byz = byz_lib.byz_mask(C, fed.n_byzantine)
 
         server = st["server"]
@@ -111,7 +120,7 @@ class BaselineTrainer:
 
         losses = jax.vmap(lambda p, b, k: self.loss(p, b, k))(
             W1, batch, jax.random.split(key, C))
-        metrics = {"loss": jnp.mean(losses)}
+        metrics = {"loss": jnp.mean(losses), "n_active": jnp.sum(act)}
         new = dict(st)
 
         m = self.method
@@ -153,6 +162,24 @@ class BaselineTrainer:
                 p = p / jnp.sum(p)
             new["p"] = p
             new["server"] = agg.fedavg(W_sent, weights=p)
+        elif m == "fedasync":
+            # AFO server (arXiv:1903.03934): each arriving model is mixed
+            # into the server with rate alpha * s(t - tau_i), where tau_i is
+            # the client's last participation round; simultaneous arrivals
+            # are averaged (SNIPPETS.md Snippet 1 idiom).
+            stale = (st["t"] - st["tau"]).astype(jnp.float32)
+            a_t = self.async_alpha * staleness_weights(stale, fed) \
+                * act.astype(jnp.float32)
+            n_act = jnp.maximum(jnp.sum(act), 1)
+
+            def mix(s, w):
+                a = a_t.reshape((-1,) + (1,) * s.ndim)
+                delta = jnp.sum(a * (w.astype(jnp.float32)
+                                     - s[None].astype(jnp.float32)), axis=0)
+                return (s.astype(jnp.float32) + delta / n_act).astype(s.dtype)
+
+            new["server"] = jax.tree.map(mix, server, W_sent)
+            new["tau"] = jnp.where(act, st["t"], st["tau"])
         elif m in ("rsa", "dp_rsa"):
             # RSA moves z toward clients: z <- z - lr * psi * sum sign(z - w)
             sgn = agg.rsa_sign(W_sent, server)

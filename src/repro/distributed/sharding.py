@@ -135,7 +135,7 @@ class ShardingPlan:
                                              client_dim=True),
                    "count": vec}
         return FedState(W=W, z=z, z_local=z_local, phi=phi, lam=vec, eps=vec,
-                        t=P(), opt=opt)
+                        t=P(), opt=opt, tau=vec)
 
     # ------------------------------------------------------------------
     def batch_spec(self, leaf_shape: Tuple[int, ...]) -> P:

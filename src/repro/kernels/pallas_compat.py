@@ -1,0 +1,11 @@
+"""Version compatibility for the pallas TPU API.
+
+jax renamed ``TPUCompilerParams`` -> ``CompilerParams`` across releases;
+export whichever this install provides so the kernels work on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or getattr(_pltpu, "TPUCompilerParams")

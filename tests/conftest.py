@@ -5,3 +5,24 @@ import sys
 # placeholder devices in its own process; never here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+# hypothesis is optional: when absent, the property tests skip gracefully
+# instead of failing collection.  Test modules use
+# ``from conftest import given, settings, st``.
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _NoStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _NoStrategies()

@@ -1,0 +1,110 @@
+"""Deterministic invariants of the event-driven schedule simulator
+(core/async_engine.py): round-time accounting, S-of-M activation, staleness
+bookkeeping, and the dropout/rejoin + straggler scenario knobs."""
+import numpy as np
+import pytest
+
+from repro.core.async_engine import DelayModel, SimResult, simulate
+
+
+def test_sync_times_are_cumulative_round_max():
+    """Sync round times are strictly increasing and equal the running sum of
+    per-round max delay (every client waits for the slowest)."""
+    dm = DelayModel(n_clients=7, hetero=0.9, seed=4)
+    sim = simulate("sync", 25, dm)
+    d = dm.round_delays(25)
+    np.testing.assert_allclose(sim.times, np.cumsum(d.max(axis=1)))
+    assert (np.diff(sim.times) > 0).all()
+    assert sim.active.all()
+
+
+def test_async_activates_exactly_s():
+    for frac in (0.25, 0.5, 0.75):
+        dm = DelayModel(n_clients=8, seed=1)
+        sim = simulate("async", 30, dm, active_frac=frac)
+        s = max(1, int(round(8 * frac)))
+        assert (sim.active.sum(axis=1) == s).all()
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_staleness_finite_and_resets_on_participation(mode):
+    dm = DelayModel(n_clients=9, hetero=1.2, seed=2)
+    n_rounds = 40
+    sim = simulate(mode, n_rounds, dm, active_frac=0.4)
+    assert np.isfinite(sim.staleness).all()
+    assert (sim.staleness >= 0).all()
+    assert (sim.staleness < n_rounds).all()
+    # participation resets staleness to 0 ...
+    assert (sim.staleness[sim.active] == 0).all()
+    # ... and skipping a round grows it by exactly 1
+    for r in range(1, n_rounds):
+        skipped = ~sim.active[r]
+        np.testing.assert_array_equal(
+            sim.staleness[r][skipped], sim.staleness[r - 1][skipped] + 1)
+
+
+def test_staleness_matches_last_participation():
+    sim = simulate("async", 30, DelayModel(n_clients=6, seed=5),
+                   active_frac=0.5)
+    last = np.zeros(6, np.int64)
+    for r in range(30):
+        last[sim.active[r]] = r
+        np.testing.assert_array_equal(sim.staleness[r], r - last)
+
+
+def test_dropout_never_activates_dropped_client():
+    dm = DelayModel(n_clients=10, seed=7, dropout_prob=0.3, rejoin_prob=0.2)
+    for mode in ("sync", "async"):
+        sim = simulate(mode, 60, dm, active_frac=0.5)
+        assert not (sim.active & ~sim.available).any()
+        assert (~sim.available).any(), "scenario produced no dropouts"
+        assert (sim.available.sum(axis=1) >= 1).all()
+        assert (np.diff(sim.times) >= 0).all()
+
+
+def test_rejoin_actually_happens():
+    dm = DelayModel(n_clients=10, seed=7, dropout_prob=0.3, rejoin_prob=0.5)
+    av = dm.availability(80)
+    came_back = (~av[:-1] & av[1:]).any()
+    assert came_back
+
+
+def test_dropout_off_means_always_available():
+    dm = DelayModel(n_clients=5, seed=0)
+    assert dm.availability(20).all()
+
+
+def test_bursty_stragglers_inflate_delays():
+    base = DelayModel(n_clients=6, seed=3, jitter=0.0)
+    burst = DelayModel(n_clients=6, seed=3, jitter=0.0,
+                       burst_prob=0.5, burst_scale=25.0)
+    d0, d1 = base.round_delays(40), burst.round_delays(40)
+    assert d1.mean() > 2 * d0.mean()
+    assert (d1 >= d0 - 1e-12).all()
+
+
+def test_heavy_tail_pareto_delays():
+    dm = DelayModel(n_clients=6, seed=3, tail="pareto", pareto_shape=1.1)
+    d = dm.round_delays(200)
+    assert np.isfinite(d).all() and (d > 0).all()
+    # heavy tail: the max dwarfs the median
+    assert d.max() > 10 * np.median(d)
+    sim = simulate("async", 20, dm, active_frac=0.5)
+    assert (np.diff(sim.times) > 0).all()
+
+
+def test_unknown_mode_and_tail_raise():
+    dm = DelayModel(n_clients=4)
+    with pytest.raises(ValueError):
+        simulate("bulk", 5, dm)
+    with pytest.raises(ValueError):
+        DelayModel(n_clients=4, tail="cauchy").round_delays(3)
+
+
+def test_simresult_fields():
+    sim = simulate("async", 12, DelayModel(n_clients=5, seed=0))
+    assert isinstance(sim, SimResult)
+    assert sim.times.shape == (12,)
+    assert sim.active.shape == sim.staleness.shape == sim.available.shape \
+        == (12, 5)
+    assert sim.active.dtype == bool and sim.available.dtype == bool

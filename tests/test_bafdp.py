@@ -128,6 +128,147 @@ def test_local_steps_consensus_cadence():
     assert changed == [False, False, True, False, False, True]
 
 
+def test_external_mask_is_strict_generalization():
+    """Feeding bafdp_round the very mask its internal sampler would draw
+    (constant staleness decay) reproduces the seed numerics exactly."""
+    fed = FedConfig(n_clients=8, active_frac=0.5, staleness_decay="constant")
+    state_a, batch, step, key = make_problem(fed)
+    state_b = state_a
+    for t in range(12):
+        kt = jax.random.fold_in(key, t)
+        # the internal path draws act from the first of three key splits
+        k_act = jax.random.split(kt, 3)[0]
+        mask = bafdp.active_mask(k_act, fed.n_clients, fed.active_frac)
+        state_a, m_a = step(state_a, batch, kt)             # internal sampler
+        state_b, m_b = step(state_b, batch, kt, act=mask)   # external mask
+        np.testing.assert_allclose(float(m_a["loss"]), float(m_b["loss"]),
+                                   rtol=1e-6)
+    for la, lb in zip(jax.tree.leaves(state_a), jax.tree.leaves(state_b)):
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32), rtol=1e-6)
+
+
+def test_external_mask_jit_stable():
+    """Per-round masks are traced array args: compilation count must not
+    grow with rounds."""
+    fed = FedConfig(n_clients=6, active_frac=0.5)
+    state, batch, _, key = make_problem(fed)
+    from repro.core.byzantine import byz_mask
+    from repro.core.privacy import gaussian_c3
+
+    traces = {"n": 0}
+
+    def counted_round(st, b, k, act):
+        traces["n"] += 1
+        return bafdp.bafdp_round(
+            st, b, k, act=act,
+            local_loss=lambda p, bb, kk, e: mse_loss(
+                p, perturb_inputs(kk, bb[0], e, 0.02), bb[1], CFG),
+            fed=fed, c3=gaussian_c3(CFG.d_x + CFG.d_y, fed.dp_delta,
+                                    fed.dp_sensitivity),
+            n_samples=200, d_dim=CFG.d_x + CFG.d_y,
+            byz_mask=byz_mask(fed.n_clients, fed.n_byzantine))
+
+    step = jax.jit(counted_round)
+    rng = np.random.RandomState(0)
+    for t in range(8):
+        mask = jnp.asarray(rng.rand(fed.n_clients) < 0.5)
+        state, _ = step(state, batch, jax.random.fold_in(key, t), mask)
+    assert traces["n"] == 1, f"recompiled {traces['n']} times"
+
+
+def test_staleness_weights_schedules():
+    stale = jnp.asarray([0.0, 1.0, 4.0, 5.0, 9.0])
+    const = bafdp.staleness_weights(
+        stale, FedConfig(staleness_decay="constant"))
+    np.testing.assert_allclose(np.asarray(const), 1.0)
+    hinge = bafdp.staleness_weights(
+        stale, FedConfig(staleness_decay="hinge",
+                         staleness_hinge_a=10.0, staleness_hinge_b=4.0))
+    # AFO hinge 1/(a (d - b) + 1): continuous at d = b
+    np.testing.assert_allclose(np.asarray(hinge),
+                               [1.0, 1.0, 1.0, 1 / 11.0, 1 / 51.0])
+    poly = bafdp.staleness_weights(
+        stale, FedConfig(staleness_decay="poly", staleness_poly_a=0.5))
+    np.testing.assert_allclose(np.asarray(poly),
+                               (np.asarray(stale) + 1.0) ** -0.5, rtol=1e-6)
+    with pytest.raises(ValueError):
+        bafdp.staleness_weights(stale, FedConfig(staleness_decay="exp"))
+
+
+def test_tau_tracks_last_participation():
+    fed = FedConfig(n_clients=6, active_frac=0.5)
+    state, batch, step, key = make_problem(fed)
+    last = np.zeros(6, np.int64)
+    rng = np.random.RandomState(3)
+    for t in range(7):
+        mask = rng.rand(6) < 0.5
+        state, m = step(state, batch, jax.random.fold_in(key, t),
+                        act=jnp.asarray(mask))
+        last[mask] = t
+        np.testing.assert_array_equal(np.asarray(state.tau), last)
+        # metric reports the pre-round staleness mean (t - tau before update)
+        assert np.isfinite(float(m["staleness_mean"]))
+
+
+@pytest.mark.parametrize("decay", ["hinge", "poly"])
+def test_staleness_decay_variants_converge(decay):
+    fed = FedConfig(n_clients=8, active_frac=0.4, staleness_decay=decay)
+    _, losses, m = run(fed, n_rounds=60)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] * 1.05
+    assert float(m["staleness_weight_mean"]) <= 1.0 + 1e-6
+
+
+def test_compress_signs_excludes_decay():
+    """The int8 sign collective is unweighted — requesting it together with
+    a staleness decay is a config conflict, not a silent fallback."""
+    fed = FedConfig(n_clients=4, compress_signs=True, staleness_decay="poly")
+    state, batch, step, key = make_problem(fed)
+    with pytest.raises(ValueError, match="compress_signs"):
+        step(state, batch, key)
+
+
+def test_dual_step_damped_by_absence():
+    """Eq. 22: a returning client's phi step shrinks with its absence
+    length (pre-round t - tau), not with the consumption-age vector that is
+    0 wherever the step applies."""
+    fed = FedConfig(n_clients=4, active_frac=1.0, staleness_decay="poly",
+                    staleness_poly_a=1.0)
+    state, batch, step, key = make_problem(fed)
+    state, _ = step(state, batch, key)      # t=1, tau=0 everywhere
+    t10 = jnp.asarray(10, jnp.int32)
+    fresh = state._replace(t=t10, tau=jnp.full((4,), 9, jnp.int32))
+    absent = state._replace(t=t10, tau=jnp.zeros((4,), jnp.int32))
+    act = jnp.ones((4,), bool)
+    out_f, _ = step(fresh, batch, key, act=act)
+    out_a, _ = step(absent, batch, key, act=act)
+
+    def dphi(out, ref):
+        return sum(float(np.abs(np.asarray(a, np.float32)
+                                - np.asarray(b, np.float32)).sum())
+                   for a, b in zip(jax.tree.leaves(out.phi),
+                                   jax.tree.leaves(ref.phi)))
+
+    assert 0 < dphi(out_a, absent) < dphi(out_f, fresh)
+
+
+def test_external_stale_vector_override():
+    """A supplied staleness vector changes the round under poly decay (and
+    is a no-op under constant decay)."""
+    fed = FedConfig(n_clients=6, active_frac=1.0, staleness_decay="poly",
+                    staleness_poly_a=0.9)
+    state, batch, step, key = make_problem(fed)
+    warm, _ = step(state, batch, key)   # t=1, so decay weights differ from 1
+    fresh = jnp.zeros((6,), jnp.float32)
+    old = jnp.full((6,), 50.0, jnp.float32)
+    s_fresh, _ = step(warm, batch, key, stale=fresh)
+    s_old, _ = step(warm, batch, key, stale=old)
+    z_fresh = np.asarray(jax.tree.leaves(s_fresh.z)[0])
+    z_old = np.asarray(jax.tree.leaves(s_old.z)[0])
+    assert not np.allclose(z_fresh, z_old)
+
+
 def test_convergence_rate_order():
     """Theorem 1 sanity: rounds-to-threshold grows no faster than ~1/gap^2
     (we check T(0.5 gap) <= 6x T(gap) on a smooth problem)."""

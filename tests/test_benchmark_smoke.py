@@ -1,10 +1,11 @@
 """Benchmark-harness smoke: every suite produces CSV rows in --quick mode
 with tiny round counts (the full run is benchmarks.run / bench_output.txt)."""
+import numpy as np
 import pytest
 
-from benchmarks import (fig3_privacy_level, fig7_distributiveness,
-                        fig8_robust_convergence, kernel_bench,
-                        roofline_table, table4_byzantine,
+from benchmarks import (fig3_privacy_level, fig456_async_efficiency,
+                        fig7_distributiveness, fig8_robust_convergence,
+                        kernel_bench, roofline_table, table4_byzantine,
                         theorem1_convergence)
 
 SUITES = {
@@ -18,6 +19,7 @@ SUITES = {
 }
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(SUITES))
 def test_suite_quick(name):
     rows = SUITES[name](rounds=8, quick=True)
@@ -26,6 +28,41 @@ def test_suite_quick(name):
         parts = r.split(",", 2)
         assert len(parts) == 3, r             # name,us_per_call,derived
         float(parts[1])
+
+
+def test_short_mask_schedule_rejected():
+    """Recycling a schedule shorter than the training horizon would rebuild
+    the schedule/timestamp mismatch this plumbing removes — hard error."""
+    from benchmarks.common import train_bafdp
+    from repro.configs import FedConfig
+    short = np.ones((3, 8), bool)
+    with pytest.raises(ValueError, match="covers 3 rounds"):
+        train_bafdp("milano", 1, FedConfig(n_clients=8), rounds=5,
+                    active_masks=short)
+
+
+@pytest.mark.slow
+def test_fig456_trains_on_simulator_masks():
+    """The wall-clock rows and the training dynamics must come from ONE
+    event-driven schedule: the per-round n_active the trainer observed has
+    to equal the simulator masks' row sums."""
+    rows, metas = fig456_async_efficiency.main(rounds=6, quick=True,
+                                               with_meta=True)
+    assert rows and len(metas) == 1
+    for r in rows:
+        parts = r.split(",", 2)
+        assert len(parts) == 3 and parts[0].startswith("fig456/")
+        float(parts[1])
+    meta = metas[0]
+    masks_a, masks_s = meta["masks_async"], meta["masks_sync"]
+    # sync trained on active_frac=1.0 masks, async on S-of-M masks
+    assert masks_s.all()
+    C = masks_a.shape[1]
+    s = max(1, int(round(C * meta["active_frac"])))
+    assert (masks_a.sum(1) == s).all() and s < C
+    np.testing.assert_array_equal(meta["n_active_async"], masks_a.sum(1))
+    np.testing.assert_array_equal(meta["n_active_sync"], masks_s.sum(1))
+    assert (meta["staleness_async"][masks_a] == 0).all()
 
 
 def test_roofline_artifacts_complete():

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st   # hypothesis or graceful-skip stubs
 
 from repro.checkpoint import Checkpointer, restore_pytree, save_pytree
 from repro.configs import ARCHS, MLP_H1, MLP_H24, reduce_for_smoke
@@ -156,18 +156,18 @@ def test_checkpointer_rolls():
 # --------------------------------------------------------------- async
 def test_async_faster_than_sync():
     dm = DelayModel(n_clients=10, hetero=1.0, seed=3)
-    t_sync, a_sync = simulate("sync", 50, dm)
-    t_async, a_async = simulate("async", 50, dm, active_frac=0.5)
-    assert t_async[-1] < t_sync[-1]          # the straggler effect
-    assert a_sync.all()
-    assert (a_async.sum(1) == 5).all()
+    sim_sync = simulate("sync", 50, dm)
+    sim_async = simulate("async", 50, dm, active_frac=0.5)
+    assert sim_async.times[-1] < sim_sync.times[-1]   # the straggler effect
+    assert sim_sync.active.all()
+    assert (sim_async.active.sum(1) == 5).all()
 
 
 @given(st.integers(2, 20), st.floats(0.1, 1.0))
 @settings(max_examples=15, deadline=None)
 def test_async_active_counts(C, frac):
     dm = DelayModel(n_clients=C, seed=0)
-    _, active = simulate("async", 10, dm, active_frac=frac)
+    active = simulate("async", 10, dm, active_frac=frac).active
     s = max(1, int(round(C * frac)))
     assert (active.sum(1) == s).all()
 
@@ -175,5 +175,5 @@ def test_async_active_counts(C, frac):
 def test_times_monotone():
     dm = DelayModel(n_clients=6, seed=1)
     for mode in ("sync", "async"):
-        t, _ = simulate(mode, 30, dm)
+        t = simulate(mode, 30, dm).times
         assert (np.diff(t) > 0).all()

@@ -1,0 +1,92 @@
+"""FedAsync (AFO, arXiv:1903.03934) baseline trainer: staleness-weighted
+server mixing, tau bookkeeping, and external event-driven masks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import FedConfig, MLP_H1
+from repro.core.trainers import BaselineTrainer
+from repro.models.forecasting import init_forecaster, mse_loss
+
+CFG = MLP_H1
+
+
+def _make(n_clients=5, **fed_kw):
+    fed = FedConfig(n_clients=n_clients, attack="none", **fed_kw)
+
+    def loss(p, b, k):
+        x, y = b
+        return mse_loss(p, x, y, CFG)
+
+    tr = BaselineTrainer(method="fedasync", loss=loss, fed=fed)
+    st = tr.init(init_forecaster(jax.random.PRNGKey(0), CFG))
+    key = jax.random.PRNGKey(1)
+    X = jax.random.normal(key, (n_clients, 16, CFG.d_x))
+    Y = jnp.sum(X[..., :3], -1, keepdims=True) * 0.5
+    return tr, st, (X, Y), key
+
+
+def test_fedasync_tau_tracks_participation():
+    tr, st, batch, key = _make()
+    step = tr.jitted_round()
+    rng = np.random.RandomState(0)
+    last = np.zeros(5, np.int64)
+    for t in range(6):
+        mask = rng.rand(5) < 0.5
+        st, m = step(st, batch, jax.random.fold_in(key, t),
+                     act=jnp.asarray(mask))
+        last[mask] = t
+        np.testing.assert_array_equal(np.asarray(st["tau"]), last)
+        assert np.isfinite(float(m["loss"]))
+        assert int(m["n_active"]) == int(mask.sum())
+
+
+def test_fedasync_empty_round_is_noop():
+    """No arrivals -> the AFO server keeps its model."""
+    tr, st, batch, key = _make()
+    step = tr.jitted_round()
+    st, _ = step(st, batch, key)   # warm one round
+    before = [np.asarray(l).copy() for l in jax.tree.leaves(st["server"])]
+    st2, _ = step(st, batch, jax.random.fold_in(key, 9),
+                  act=jnp.zeros(5, bool))
+    for b, a in zip(before, jax.tree.leaves(st2["server"])):
+        np.testing.assert_array_equal(b, np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(st["tau"]),
+                                  np.asarray(st2["tau"]))
+
+
+def test_fedasync_staleness_damps_mixing():
+    """Under poly decay, a long-stale arrival moves the server less than a
+    fresh one (same weights, same data, same key)."""
+    tr, st, batch, key = _make(staleness_decay="poly", staleness_poly_a=1.0)
+    step = tr.jitted_round()
+    only0 = jnp.asarray([True, False, False, False, False])
+    # fresh: client 0 participated last round
+    st_f = dict(st)
+    st_f["t"] = jnp.asarray(10, jnp.int32)
+    st_f["tau"] = jnp.asarray([10, 0, 0, 0, 0], jnp.int32)
+    # stale: client 0 last participated 10 rounds ago
+    st_s = dict(st)
+    st_s["t"] = jnp.asarray(10, jnp.int32)
+    st_s["tau"] = jnp.zeros(5, jnp.int32)
+    out_f, _ = step(st_f, batch, key, act=only0)
+    out_s, _ = step(st_s, batch, key, act=only0)
+
+    def delta(out):
+        return sum(float(np.abs(np.asarray(a) - np.asarray(b)).sum())
+                   for a, b in zip(jax.tree.leaves(out["server"]),
+                                   jax.tree.leaves(st["server"])))
+
+    assert delta(out_s) < delta(out_f)
+    assert delta(out_s) > 0
+
+
+def test_fedasync_training_reduces_loss():
+    tr, st, batch, key = _make(active_frac=0.6)
+    step = tr.jitted_round()
+    losses = []
+    for t in range(40):
+        st, m = step(st, batch, jax.random.fold_in(key, t))
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]

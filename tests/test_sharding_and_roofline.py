@@ -107,6 +107,8 @@ def test_trip_count_correction():
     assert tot.dot_flops == pytest.approx(expect, rel=0.01), (
         tot.dot_flops, expect)
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+        ca = ca[0]
     assert ca["flops"] == pytest.approx(expect / 17, rel=0.01)
 
 
