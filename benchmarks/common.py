@@ -45,21 +45,26 @@ METHODS = {
 }
 
 
-def _check_masks(active_masks, rounds: int, n_clients: int):
+def _check_schedule(arr, rounds: int, n_clients: int, name: str,
+                    dtype=bool):
     """An external schedule must cover every trained round — recycling masks
     would silently decouple training from the simulator's timestamps, the
     exact mismatch the mask plumbing exists to eliminate."""
-    if active_masks is None:
+    if arr is None:
         return None
-    masks = jnp.asarray(np.asarray(active_masks), bool)
-    if masks.ndim != 2 or masks.shape[1] != n_clients:
+    out = jnp.asarray(np.asarray(arr)).astype(dtype)
+    if out.ndim != 2 or out.shape[1] != n_clients:
         raise ValueError(
-            f"active_masks must be (rounds, {n_clients}), got {masks.shape}")
-    if masks.shape[0] < rounds:
+            f"{name} must be (rounds, {n_clients}), got {out.shape}")
+    if out.shape[0] < rounds:
         raise ValueError(
-            f"active_masks covers {masks.shape[0]} rounds < {rounds} trained;"
+            f"{name} covers {out.shape[0]} rounds < {rounds} trained;"
             " simulate() the full horizon instead of recycling a schedule")
-    return masks
+    return out
+
+
+def _check_masks(active_masks, rounds: int, n_clients: int):
+    return _check_schedule(active_masks, rounds, n_clients, "active_masks")
 
 
 def forecast_cfg(model: str, horizon: int) -> ForecastConfig:
@@ -104,6 +109,7 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
                 rounds: int = ROUNDS, seed: int = 0,
                 input_sigma: float = 0.02,
                 active_masks: Optional[np.ndarray] = None,
+                staleness: Optional[np.ndarray] = None,
                 collect: Tuple[str, ...] = (),
                 optimizer: str = "adam"):
     """Returns (state, cfg, history dict).
@@ -111,7 +117,10 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
     ``active_masks`` (rounds, C) bool feeds an external event-driven
     schedule (``core/async_engine.simulate().active``) into every round, so
     training dynamics match the simulator's wall-clock bookkeeping; ``None``
-    keeps the internal uniformly-random sampler.
+    keeps the internal uniformly-random sampler.  ``staleness`` (rounds, C)
+    optionally feeds the simulator's consumption-age vectors
+    (``SimResult.staleness``) into the Eq. (20) decay/compensation path
+    instead of the internal ``t - tau`` bookkeeping.
 
     Experimental setting per the paper Sec. V-D: Adam on the data/DRO
     gradient; grid-searched DRO scale (see FedConfig.dro_weight)."""
@@ -132,11 +141,15 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
         n_samples=train["x"].shape[1], d_dim=cfg.d_x + cfg.d_y,
         byz_mask=byz_mask(fed.n_clients, fed.n_byzantine)))
     masks = _check_masks(active_masks, rounds, fed.n_clients)
+    stale_v = _check_schedule(staleness, rounds, fed.n_clients,
+                              "staleness", dtype=jnp.float32)
     rng = np.random.RandomState(seed)
     hist: Dict[str, List[float]] = {k: [] for k in collect}
     for t in range(rounds):
         x, y = client_batches(rng, train, BATCH)
         kwargs = {} if masks is None else {"act": masks[t]}
+        if stale_v is not None:
+            kwargs["stale"] = stale_v[t]
         state, m = step(state, (jnp.asarray(x), jnp.asarray(y)),
                         jax.random.fold_in(key, t), **kwargs)
         for k in collect:

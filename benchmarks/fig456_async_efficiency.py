@@ -4,14 +4,23 @@ latencies.
 
 ``core/async_engine.simulate`` produces one event-driven schedule per mode
 (wall-clock timestamps + per-round active masks + staleness vectors) and the
-*same* masks are fed into ``train_bafdp`` — so the loss-vs-time curves and
-the timestamps they are plotted against come from a single schedule, not two
-unrelated ones.  ``with_meta=True`` additionally returns per-dataset
-metadata (the masks, staleness, and per-round ``n_active`` the training loop
+*same* masks (and, for the scenario variants, staleness vectors) are fed
+into ``train_bafdp`` — so the loss-vs-time curves and the timestamps they
+are plotted against come from a single schedule, not two unrelated ones.
+
+Beyond the sync-vs-async headline, ``SCENARIOS`` exercises the adaptive-
+asynchrony subsystem on the first dataset: a bounded-staleness fleet
+(``age_aware`` selection + adaptive quorum + Taylor staleness compensation),
+surge arrivals (bursty stragglers), and flapping availability
+(dropout/rejoin) — each trained on its own simulated schedule.
+
+``with_meta=True`` additionally returns per-dataset metadata (the masks,
+staleness, realized quorums, and per-round ``n_active`` the training loop
 actually saw) so tests can assert the consistency end to end.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List, Tuple, Union
 
@@ -22,6 +31,47 @@ from repro.configs import FedConfig
 from repro.core.async_engine import DelayModel, simulate
 
 ACTIVE_FRAC = 0.6
+
+# scenario variants: (DelayModel overrides, simulate kwargs, FedConfig
+# overrides).  All run async mode with the staleness vectors plumbed into
+# training (decay + Taylor compensation see the schedule's consumption ages).
+SCENARIOS = {
+    "age_adaptive": (           # bounded-staleness fleet
+        dict(hetero=1.8, jitter=0.1),
+        dict(quorum="adaptive", s_min=2, select="age_aware"),
+        dict(staleness_decay="poly", staleness_compensation="taylor")),
+    "surge": (                  # bursty stragglers pile arrivals up
+        dict(burst_prob=0.3, burst_scale=15.0),
+        dict(quorum="adaptive", s_min=2),
+        dict(staleness_decay="poly")),
+    "flap": (                   # dropout/rejoin availability flapping
+        dict(dropout_prob=0.25, rejoin_prob=0.4),
+        dict(quorum="adaptive", s_min=1),
+        dict(staleness_decay="hinge")),
+}
+
+
+def run_scenario(name: str, dataset: str, rounds: int, n: int = 8,
+                 seed: int = 0) -> Tuple[str, Dict]:
+    dm_kw, sim_kw, fed_kw = SCENARIOS[name]
+    t0 = time.time()
+    dm = DelayModel(**{"n_clients": n, "hetero": 1.0, "seed": seed, **dm_kw})
+    sim = simulate("async", rounds, dm, active_frac=ACTIVE_FRAC, **sim_kw)
+    fed = dataclasses.replace(
+        FedConfig(n_clients=n, active_frac=ACTIVE_FRAC), **fed_kw)
+    _, _, h = train_bafdp(dataset, 1, fed, rounds,
+                          active_masks=sim.active, staleness=sim.staleness,
+                          collect=("data_loss", "n_active"))
+    loss = np.asarray(h["data_loss"])
+    us = (time.time() - t0) * 1e6 / max(rounds, 1)
+    row = (f"fig456/{dataset}:{name},{us:.1f},"
+           f"t_total_s={sim.times[-1]:.1f};max_stale={sim.staleness.max()};"
+           f"mean_quorum={sim.quorum.mean():.2f};"
+           f"final_loss={loss[-1]:.4f}")
+    meta = {"scenario": name, "masks": sim.active,
+            "staleness": sim.staleness, "quorum": sim.quorum,
+            "n_active": np.asarray(h["n_active"])}
+    return row, meta
 
 
 def main(rounds: int = ROUNDS, quick: bool = False, with_meta: bool = False
@@ -60,15 +110,23 @@ def main(rounds: int = ROUNDS, quick: bool = False, with_meta: bool = False
             f"fig456/{dataset},{us:.1f},t_async_s={ta:.1f};t_sync_s={ts:.1f};"
             f"speedup={ts / ta if np.isfinite(ta) and ta > 0 else float('nan'):.2f};"
             f"final_loss_async={la[-1]:.4f};final_loss_sync={ls[-1]:.4f}")
-        metas.append({
+        meta = {
             "dataset": dataset,
             "masks_async": sim_async.active,
             "masks_sync": sim_sync.active,
             "staleness_async": sim_async.staleness,
+            "quorum_async": sim_async.quorum,
             "n_active_async": np.asarray(h_async["n_active"]),
             "n_active_sync": np.asarray(h_sync["n_active"]),
             "active_frac": ACTIVE_FRAC,
-        })
+            "variants": {},
+        }
+        if dataset == datasets[0]:
+            for name in sorted(SCENARIOS):
+                row, vmeta = run_scenario(name, dataset, rounds, n=n)
+                rows.append(row)
+                meta["variants"][name] = vmeta
+        metas.append(meta)
     if with_meta:
         return rows, metas
     return rows

@@ -16,12 +16,20 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _path_key(entry) -> str:
+    """Stable string for one path entry: DictKey (.key), SequenceKey
+    (.idx), or GetAttrKey (.name — NamedTuples like FedState)."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
 def _flatten(tree: Any):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
-        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
-                       for p in path)
+        key = "/".join(_path_key(p) for p in path)
         arr = np.asarray(leaf) if leaf.dtype != jnp.bfloat16 \
             else np.asarray(leaf.astype(jnp.float32))
         out[key] = arr   # bf16 has no numpy dtype; restore re-casts via template
@@ -45,8 +53,7 @@ def restore_pytree(path: str, template: Any) -> Any:
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in flat:
-        key = "/".join(str(q.key) if hasattr(q, "key") else str(q.idx)
-                       for q in p)
+        key = "/".join(_path_key(q) for q in p)
         arr = data[key]
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
         leaves.append(jnp.asarray(arr, dtype=leaf.dtype))

@@ -222,6 +222,18 @@ class FedConfig:
     staleness_hinge_a: float = 10.0
     staleness_hinge_b: float = 4.0
     staleness_poly_a: float = 0.5
+    # gradient-staleness *compensation* (DC-ASGD-style first-order Taylor
+    # correction, arXiv:1609.08326), applied ALONGSIDE decay, not instead of
+    # it.  FedState.comp caches a per-client EWMA of the local update
+    # direction (a cheap momentum/curvature proxy); a client whose message
+    # the server consumes at age d is extrapolated d more local steps:
+    #   w~_i = w_i - alpha_w * compensation_scale * min(d, clip) * comp_i
+    # before it enters the Eq. (20) sign sum and the Eq. (22) dual step.
+    # "none" leaves the round bit-identical to the uncompensated numerics.
+    staleness_compensation: str = "none"   # none | taylor
+    compensation_beta: float = 0.9         # EWMA rate of the momentum proxy
+    compensation_scale: float = 1.0        # scale on the Taylor term
+    compensation_clip: float = 10.0        # max extrapolated rounds
     # beyond-paper knobs
     local_steps: int = 1           # K local steps between consensus rounds
     compress_signs: bool = False   # int8 sign-compressed consensus collective

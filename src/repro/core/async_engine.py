@@ -11,9 +11,13 @@ client fleet too — so wall-clock comparisons of BSFDP (sync) vs BAFDP
   ``rejoin_prob``); a dropped client is never activated;
 * **sync**: every round waits for the slowest available client
   (the "straggler" effect the paper describes);
-* **async**: the server proceeds once the fastest S available clients of
-  the round have arrived; slower clients keep computing and deliver stale
-  updates at their own completion times (Definition 2's t-hat bookkeeping).
+* **async**: the server proceeds once S available clients of the round
+  have arrived; slower clients keep computing and deliver stale updates at
+  their own completion times (Definition 2's t-hat bookkeeping).  The
+  quorum S is fixed (``round(C * active_frac)``) or **adaptive** (an EWMA
+  of observed arrival counts, bounded by ``s_min``/``s_max``), and the
+  winners are the **fastest** S or chosen **age-aware** (clients stale
+  beyond a threshold are admitted first, bounding max staleness).
 
 ``simulate`` returns a :class:`SimResult` with per-round wall-clock
 timestamps, active masks, per-round staleness vectors (``t - tau_i``, 0 on
@@ -26,7 +30,7 @@ schedule that produced their timestamps.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -95,11 +99,34 @@ class SimResult(NamedTuple):
     active: np.ndarray       # (n_rounds, C) bool participation masks
     staleness: np.ndarray    # (n_rounds, C) int: r - tau_i (0 on participation)
     available: np.ndarray    # (n_rounds, C) bool dropout/rejoin state
+    quorum: np.ndarray       # (n_rounds,) int realized per-round quorum S
 
 
 def simulate(mode: str, n_rounds: int, delays: DelayModel,
-             active_frac: float = 0.6) -> SimResult:
-    """Event-driven schedule for ``n_rounds`` federated rounds."""
+             active_frac: float = 0.6, *, quorum: str = "fixed",
+             s_min: Optional[int] = None, s_max: Optional[int] = None,
+             quorum_beta: float = 0.25, select: str = "fastest",
+             age_threshold: Optional[int] = None) -> SimResult:
+    """Event-driven schedule for ``n_rounds`` federated rounds.
+
+    ``quorum`` — per-round S policy (async mode):
+      * ``fixed``: S = round(C * active_frac), the PR-1 behaviour;
+      * ``adaptive``: the server tracks an EWMA (rate ``quorum_beta``) of
+        the number of available clients whose results had arrived by each
+        round's close — admitted or not — and sets the next round's S to
+        that observed arrival rate, clipped to [``s_min``, ``s_max``].  A
+        surge of arrivals piling up during a long round grows the quorum
+        to absorb it; a thinning fleet (dropout) shrinks it.
+
+    ``select`` — which S available clients win the round (async mode):
+      * ``fastest``: earliest completion times (PR-1 behaviour; fast
+        clients win repeatedly and slow ones starve);
+      * ``age_aware``: clients whose staleness has reached
+        ``age_threshold`` rounds are admitted first (oldest first, then by
+        completion time), ahead of fast repeat winners — the server waits
+        for them, trading wall-clock for a bound on max staleness.
+        ``age_threshold`` defaults to 2 * ceil(C / S).
+    """
     C = delays.n_clients
     d = delays.round_delays(n_rounds)
     avail = delays.availability(n_rounds)
@@ -107,7 +134,12 @@ def simulate(mode: str, n_rounds: int, delays: DelayModel,
     times = np.zeros(n_rounds)
     active = np.zeros((n_rounds, C), bool)
     staleness = np.zeros((n_rounds, C), np.int64)
+    quorums = np.zeros(n_rounds, np.int64)
     last_part = np.zeros(C, np.int64)
+    if quorum not in ("fixed", "adaptive"):
+        raise ValueError(f"unknown quorum mode: {quorum!r}")
+    if select not in ("fastest", "age_aware"):
+        raise ValueError(f"unknown selection policy: {select!r}")
     if mode == "sync":
         # all available clients participate; the round closes at the slowest
         t = 0.0
@@ -118,14 +150,23 @@ def simulate(mode: str, n_rounds: int, delays: DelayModel,
             active[r] = part
             last_part[part] = r
             staleness[r] = r - last_part
-        return SimResult(times, active, staleness, avail)
+            quorums[r] = int(part.sum())
+        return SimResult(times, active, staleness, avail, quorums)
     if mode != "async":
         raise ValueError(mode)
+    s_lo = max(1, s_min if s_min is not None else 1)
+    s_hi = min(C, s_max if s_max is not None else C)
+    if s_lo > s_hi:
+        raise ValueError(f"s_min={s_lo} > s_max={s_hi}")
+    age_thr = age_threshold if age_threshold is not None \
+        else 2 * int(np.ceil(C / s))
     # async: each client runs its own clock; the server closes a round when
     # S results have arrived.  next_done[i] = when client i's result lands.
     next_done = d[0].copy()
     was_avail = np.ones(C, bool)
     t = 0.0
+    s_cur = s if quorum == "fixed" else int(np.clip(s, s_lo, s_hi))
+    rate = float(s_cur)
     for r in range(n_rounds):
         # a rejoining client starts a fresh local round now — its pre-dropout
         # completion time is void
@@ -134,18 +175,37 @@ def simulate(mode: str, n_rounds: int, delays: DelayModel,
             next_done[rejoined] = t + d[r][rejoined]
         was_avail = avail[r]
         cand = np.flatnonzero(avail[r])
-        k = min(s, cand.size)
-        order = cand[np.argsort(next_done[cand], kind="stable")]
+        k = min(s_cur, cand.size)
+        if select == "age_aware":
+            age = r - last_part
+            overdue = cand[age[cand] >= age_thr]
+            fresh = cand[age[cand] < age_thr]
+            overdue = overdue[np.lexsort((next_done[overdue],
+                                          -age[overdue]))]
+            fresh = fresh[np.argsort(next_done[fresh], kind="stable")]
+            order = np.concatenate([overdue, fresh])
+        else:
+            order = cand[np.argsort(next_done[cand], kind="stable")]
         winners = order[:k]
         t = max(t, next_done[winners].max())
         times[r] = t
         active[r, winners] = True
         last_part[winners] = r
         staleness[r] = r - last_part
+        quorums[r] = k
+        if quorum == "adaptive":
+            # arrivals observed at this round's close: every available
+            # client whose result is in, whether the server admitted it or
+            # not.  Pile-ups during a stretched round grow the quorum;
+            # a thinned fleet (dropout) shrinks it.
+            ready = avail[r] & (next_done <= t)
+            rate = (1.0 - quorum_beta) * rate + quorum_beta * float(
+                ready.sum())
+            s_cur = int(np.clip(int(round(rate)), s_lo, s_hi))
         # winners immediately start their next local round
         nxt = d[min(r + 1, n_rounds - 1)]
         next_done[winners] = t + nxt[winners]
-    return SimResult(times, active, staleness, avail)
+    return SimResult(times, active, staleness, avail, quorums)
 
 
 def speedup_at(loss_sync: np.ndarray, t_sync: np.ndarray,

@@ -16,7 +16,10 @@ Faithful pieces:
     The mask may be supplied externally (event-driven schedules from
     ``core/async_engine``); per-client staleness ``t - tau_i`` (Definition
     2's t-hat) is tracked in ``FedState.tau`` and can down-weight stale
-    contributions via FedAsync-style decay (``FedConfig.staleness_decay``).
+    contributions via FedAsync-style decay (``FedConfig.staleness_decay``)
+    and/or Taylor-correct them via DC-ASGD-style compensation
+    (``FedConfig.staleness_compensation`` with the ``FedState.comp``
+    momentum cache).
 
 Beyond-paper options (recorded separately in EXPERIMENTS.md Section Perf):
 ``local_steps`` K>1 (consensus every K rounds) and ``compress_signs`` (int8
@@ -51,6 +54,28 @@ def active_mask(key, n_clients: int, active_frac: float) -> jnp.ndarray:
     perm = jax.random.permutation(key, n_clients)
     rank = jnp.argsort(perm)
     return rank < s
+
+
+def compensate_stale(W_msg: Any, comp: Any, age, fed: FedConfig) -> Any:
+    """First-order Taylor correction of stale client messages (DC-ASGD
+    flavour, arXiv:1609.08326, adapted to parameter messages).
+
+    A client whose params the server consumes at age ``d`` missed ``d``
+    local steps; extrapolate them along the cached per-client momentum
+    proxy ``comp`` (EWMA of its last observed update direction):
+
+        w~_i = w_i - alpha_w * compensation_scale * min(d, clip) * comp_i
+
+    ``age`` is (C,); clients with age 0 are untouched.  Returns fp32 leaves.
+    """
+    a = (jnp.minimum(age.astype(jnp.float32), fed.compensation_clip)
+         * fed.alpha_w * fed.compensation_scale)
+
+    def f(w, c):
+        al = a.reshape((-1,) + (1,) * (w.ndim - 1))
+        return w.astype(jnp.float32) - al * c
+
+    return jax.tree.map(f, W_msg, comp)
 
 
 def staleness_weights(stale, fed: FedConfig) -> jnp.ndarray:
@@ -108,6 +133,14 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
         raise ValueError(
             "compress_signs requires staleness_decay='constant': the int8 "
             "sign all-reduce is unweighted, so a decayed sum cannot use it")
+    if fed.staleness_compensation not in ("none", "taylor"):
+        raise ValueError(
+            f"unknown staleness_compensation: {fed.staleness_compensation!r}")
+    taylor = fed.staleness_compensation == "taylor"
+    if taylor and state.comp is None:
+        raise ValueError(
+            "staleness_compensation='taylor' needs FedState.comp — "
+            "init_fed_state with the same FedConfig")
     C = byz_mask.shape[0]
     k_act, k_noise, k_byz = jax.random.split(key, 3)
     if act is None:
@@ -205,6 +238,16 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
             "count": new_opt["count"],
         }
 
+    # momentum proxy for Taylor staleness compensation: active clients fold
+    # this round's update direction into their EWMA; inactive clients keep
+    # the cached direction from their last participation.
+    new_comp = state.comp
+    if taylor:
+        cb = fed.compensation_beta
+        comp_prop = jax.tree.map(lambda c, g: cb * c + (1.0 - cb) * g,
+                                 state.comp, full_grad)
+        new_comp = jax.tree.map(mask_leaves, comp_prop, state.comp)
+
     # eps update (Eq. 19):  d/deps [ (eta + c3/eps) G ] = -c3 G / eps^2
     d_eps = -fed.dro_weight * c3 * G_i \
         / jnp.square(jnp.maximum(state.eps, fed.eps_min)) + state.lam
@@ -226,7 +269,7 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
             (eps_new - fed.privacy_budget_a) - a1_t * state.lam), 0.0)
         new_state = FedState(W=W_new, z=state.z, z_local=state.z_local,
                              phi=state.phi, lam=lam_new, eps=eps_new,
-                             t=t + 1, opt=new_opt, tau=tau_new)
+                             t=t + 1, opt=new_opt, tau=tau_new, comp=new_comp)
         metrics = {
             "loss": jnp.sum(loss_i * act) / jnp.maximum(jnp.sum(act), 1),
             "data_loss": jnp.sum(g_i * act) / jnp.maximum(jnp.sum(act), 1),
@@ -237,10 +280,28 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
             "n_active": jnp.sum(act),
             "staleness_mean": jnp.mean(stale_v),
             "staleness_weight_mean": jnp.mean(s_w),
+            "compensation_norm": jnp.zeros(()),  # no consensus message here
         }
         return new_state, metrics
 
     do_consensus = (t % fed.local_steps) == (fed.local_steps - 1)
+
+    # Taylor-correct the stale messages the server is about to consume
+    # (Eq. 20 path): each client's params are extrapolated by the age the
+    # server sees them at — 0 for active clients, so only stale frozen
+    # params move.  Applied to W_sent, i.e. AFTER the Byzantine corruption:
+    # the server cannot tell honest from malicious messages apart.
+    comp_norm = jnp.zeros(())
+    W_srv = W_sent
+    if taylor:
+        W_srv = compensate_stale(W_sent, new_comp, stale_v, fed)
+        num = sum(jnp.sum(jnp.abs(a - b.astype(jnp.float32)))
+                  for a, b in zip(jax.tree.leaves(W_srv),
+                                  jax.tree.leaves(W_sent)))
+        den = float(sum(l.size for l in jax.tree.leaves(W_sent)))
+        # off-rounds (local_steps > 1) consume no server message — report 0
+        # there, like the structurally consensus-free branch above
+        comp_norm = jnp.where(do_consensus, num / max(den, 1.0), 0.0)
 
     def z_step(z_l, w_l, phi_l):
         sgn = jnp.sign(z_l[None].astype(jnp.float32) - w_l.astype(jnp.float32))
@@ -264,7 +325,7 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
         return jnp.where(do_consensus, z_new, z_l.astype(jnp.float32)) \
             .astype(z_l.dtype)
 
-    z_new = jax.tree.map(z_step, state.z, W_sent, state.phi)
+    z_new = jax.tree.map(z_step, state.z, W_srv, state.phi)
 
     a1_t = reg_decay(fed.alpha_lambda, t, fed.reg_decay_pow)
     lam_new = state.lam + fed.alpha_lambda * (
@@ -273,6 +334,16 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
 
     # ---------------- Step 3: active clients update phi, sync z -----------
     a2_t = reg_decay(fed.alpha_phi, t, fed.reg_decay_pow)
+
+    # Eq. 22 path: couple the dual to the client's *projected* position.
+    # A client returning after absence d = t - state.tau just took ONE
+    # local step from its stale base, so its remaining lag is d - 1 —
+    # in particular 0 for continuously-active clients, making taylor a
+    # no-op in the fully-synchronous case.
+    W_dual = W_new
+    if taylor:
+        lag = jnp.maximum((t - state.tau).astype(jnp.float32) - 1.0, 0.0)
+        W_dual = compensate_stale(W_new, new_comp, lag, fed)
 
     def phi_step(phi_l, z_l, w_l):
         upd = (z_l[None].astype(jnp.float32) - w_l.astype(jnp.float32)) \
@@ -287,7 +358,7 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
         m = act.reshape((-1,) + (1,) * (phi_l.ndim - 1))
         return jnp.where(m, new, phi_l.astype(jnp.float32)).astype(phi_l.dtype)
 
-    phi_new = jax.tree.map(phi_step, state.phi, z_new, W_new)
+    phi_new = jax.tree.map(phi_step, state.phi, z_new, W_dual)
 
     def zsync(zl_l, z_l):
         m = act.reshape((-1,) + (1,) * (zl_l.ndim - 1))
@@ -298,7 +369,7 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
 
     new_state = FedState(W=W_new, z=z_new, z_local=z_local_new, phi=phi_new,
                          lam=lam_new, eps=eps_new, t=t + 1, opt=new_opt,
-                         tau=tau_new)
+                         tau=tau_new, comp=new_comp)
     metrics = {
         "loss": jnp.sum(loss_i * act) / jnp.maximum(jnp.sum(act), 1),
         "data_loss": jnp.sum(g_i * act) / jnp.maximum(jnp.sum(act), 1),
@@ -309,6 +380,7 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
         "n_active": jnp.sum(act),
         "staleness_mean": jnp.mean(stale_v),
         "staleness_weight_mean": jnp.mean(s_w),
+        "compensation_norm": comp_norm,
     }
     return new_state, metrics
 

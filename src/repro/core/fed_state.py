@@ -26,6 +26,10 @@ class FedState(NamedTuple):
     tau: jnp.ndarray       # (C,) last-participation round (Definition 2's
                            # t-hat); staleness of client i at round t is
                            # t - tau_i
+    comp: Any = None       # per-client EWMA of the local update direction
+                           # (momentum proxy for the Taylor staleness
+                           # compensation), leaves (C, ...); None when
+                           # FedConfig.staleness_compensation == "none"
 
 
 def init_fed_state(key, init_params: Callable[[Any], Any],
@@ -45,9 +49,13 @@ def init_fed_state(key, init_params: Callable[[Any], Any],
         opt = {"m": jax.tree.map(jnp.zeros_like, W),
                "v": jax.tree.map(jnp.zeros_like, W),
                "count": jnp.zeros((C,), jnp.int32)}
+    comp = None
+    if fed.staleness_compensation != "none":
+        comp = jax.tree.map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), W)
     return FedState(W=W, z=z, z_local=z_local, phi=phi, lam=lam, eps=eps,
                     t=jnp.zeros((), jnp.int32), opt=opt,
-                    tau=jnp.zeros((C,), jnp.int32))
+                    tau=jnp.zeros((C,), jnp.int32), comp=comp)
 
 
 def consensus_gap(state: FedState) -> jnp.ndarray:

@@ -84,6 +84,9 @@ class BaselineTrainer:
         fed = self.fed
         C = fed.n_clients
         k_act, k_loc, k_byz, k_dp = jax.random.split(key, 4)
+        # eval stream derived by fold_in, NOT by widening the split: the
+        # four streams above stay bit-identical to their pre-eval-fix values
+        k_eval = jax.random.fold_in(key, 4)
         if act is None:
             act = active_mask(k_act, C, fed.active_frac)
         else:
@@ -118,9 +121,16 @@ class BaselineTrainer:
 
         W_sent = byz_lib.apply_attack(fed.attack, k_byz, W1, byz)
 
+        # loss over the ACTIVE set only (inactive clients hold frozen server
+        # params — averaging them in made baseline curves incomparable with
+        # bafdp_round's active-only loss), evaluated with its own key split
+        # rather than reusing the parent ``key``.
         losses = jax.vmap(lambda p, b, k: self.loss(p, b, k))(
-            W1, batch, jax.random.split(key, C))
-        metrics = {"loss": jnp.mean(losses), "n_active": jnp.sum(act)}
+            W1, batch, jax.random.split(k_eval, C))
+        act_f = act.astype(jnp.float32)
+        metrics = {"loss": jnp.sum(losses * act_f)
+                   / jnp.maximum(jnp.sum(act_f), 1.0),
+                   "n_active": jnp.sum(act)}
         new = dict(st)
 
         m = self.method

@@ -134,8 +134,11 @@ class ShardingPlan:
                    "v": self.param_spec_tree(state_shape.opt["v"],
                                              client_dim=True),
                    "count": vec}
+        comp = None
+        if getattr(state_shape, "comp", None) is not None:
+            comp = self.param_spec_tree(state_shape.comp, client_dim=True)
         return FedState(W=W, z=z, z_local=z_local, phi=phi, lam=vec, eps=vec,
-                        t=P(), opt=opt, tau=vec)
+                        t=P(), opt=opt, tau=vec, comp=comp)
 
     # ------------------------------------------------------------------
     def batch_spec(self, leaf_shape: Tuple[int, ...]) -> P:

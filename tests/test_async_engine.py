@@ -108,3 +108,112 @@ def test_simresult_fields():
     assert sim.active.shape == sim.staleness.shape == sim.available.shape \
         == (12, 5)
     assert sim.active.dtype == bool and sim.available.dtype == bool
+
+
+# ---------------- adaptive quorum -----------------------------------------
+def test_quorum_field_matches_active_sums():
+    for mode, frac in (("sync", 1.0), ("async", 0.5)):
+        sim = simulate(mode, 30, DelayModel(n_clients=8, seed=4),
+                       active_frac=frac)
+        np.testing.assert_array_equal(sim.quorum, sim.active.sum(axis=1))
+
+
+def test_fixed_quorum_is_constant():
+    sim = simulate("async", 30, DelayModel(n_clients=8, seed=1),
+                   active_frac=0.5)
+    assert (sim.quorum == 4).all()
+
+
+def test_adaptive_quorum_respects_bounds():
+    dm = DelayModel(n_clients=12, seed=7, dropout_prob=0.4, rejoin_prob=0.1)
+    sim = simulate("async", 80, dm, active_frac=0.5, quorum="adaptive",
+                   s_min=2, s_max=9)
+    assert (sim.quorum >= 1).all()          # k can dip below s_min only if
+    assert (sim.quorum <= 9).all()          # fewer clients are available
+    assert (sim.quorum <= sim.available.sum(axis=1)).all()
+    np.testing.assert_array_equal(sim.quorum, sim.active.sum(axis=1))
+
+
+def test_adaptive_quorum_shrinks_under_dropout():
+    """A thinning fleet delivers fewer arrivals per round — the EWMA must
+    pull the quorum below its starting point."""
+    dm = DelayModel(n_clients=12, seed=7, dropout_prob=0.4, rejoin_prob=0.1)
+    sim = simulate("async", 80, dm, active_frac=0.5, quorum="adaptive",
+                   s_min=1, s_max=12)
+    assert sim.quorum.min() < 6
+    assert len(np.unique(sim.quorum)) > 1, "quorum never adapted"
+
+
+def test_adaptive_quorum_grows_under_pileups():
+    """Heavy-tailed delays + age-aware waits stretch rounds; the arrivals
+    that pile up during the wait must grow the quorum past its start."""
+    dm = DelayModel(n_clients=12, hetero=1.5, seed=3, tail="pareto",
+                    pareto_shape=1.2)
+    sim = simulate("async", 80, dm, active_frac=0.5, quorum="adaptive",
+                   s_min=2, s_max=12, select="age_aware")
+    assert sim.quorum.max() > 6
+
+
+def test_adaptive_stable_in_stationary_fleet():
+    """No surges, no dropout: the adaptive quorum should hover at the
+    fleet's natural throughput, not drift to a bound."""
+    dm = DelayModel(n_clients=12, hetero=1.5, seed=1)
+    sim = simulate("async", 80, dm, active_frac=0.5, quorum="adaptive",
+                   s_min=1, s_max=12)
+    assert 4 <= np.median(sim.quorum) <= 8
+
+
+def test_unknown_quorum_and_select_raise():
+    dm = DelayModel(n_clients=4)
+    with pytest.raises(ValueError, match="quorum"):
+        simulate("async", 5, dm, quorum="plurality")
+    with pytest.raises(ValueError, match="selection"):
+        simulate("async", 5, dm, select="youngest")
+    with pytest.raises(ValueError, match="s_min"):
+        simulate("async", 5, dm, quorum="adaptive", s_min=4, s_max=2)
+
+
+# ---------------- age-aware selection -------------------------------------
+def test_age_aware_bounds_max_staleness():
+    """fastest starves the slow tail of a heterogeneous fleet (staleness
+    grows without bound); age_aware admits overdue clients first, keeping
+    max staleness under age_threshold + ceil(C / S)."""
+    dm = DelayModel(n_clients=10, hetero=2.0, jitter=0.05, seed=2)
+    n_rounds, C, s = 80, 10, 3
+    fast = simulate("async", n_rounds, dm, active_frac=0.3)
+    aged = simulate("async", n_rounds, dm, active_frac=0.3,
+                    select="age_aware")
+    thr = 2 * int(np.ceil(C / s))           # the default age_threshold
+    bound = thr + int(np.ceil(C / s))
+    assert aged.staleness.max() <= bound, aged.staleness.max()
+    assert fast.staleness.max() > bound     # fastest really does starve
+    # the bound costs wall-clock: waiting for stragglers is not free
+    assert aged.times[-1] >= fast.times[-1]
+
+
+def test_age_aware_custom_threshold():
+    dm = DelayModel(n_clients=8, hetero=1.8, jitter=0.05, seed=5)
+    sim = simulate("async", 60, dm, active_frac=0.5, select="age_aware",
+                   age_threshold=3)
+    assert sim.staleness.max() <= 3 + int(np.ceil(8 / 4))
+
+
+def test_age_aware_staleness_invariants_hold():
+    """The Definition-2 bookkeeping (reset on participation, +1 on skip)
+    is selection-policy-independent."""
+    sim = simulate("async", 40, DelayModel(n_clients=9, hetero=1.2, seed=2),
+                   active_frac=0.4, select="age_aware", quorum="adaptive",
+                   s_min=2)
+    assert (sim.staleness[sim.active] == 0).all()
+    for r in range(1, 40):
+        skipped = ~sim.active[r]
+        np.testing.assert_array_equal(
+            sim.staleness[r][skipped], sim.staleness[r - 1][skipped] + 1)
+
+
+def test_age_aware_never_activates_unavailable():
+    dm = DelayModel(n_clients=10, seed=7, dropout_prob=0.3, rejoin_prob=0.2)
+    sim = simulate("async", 60, dm, active_frac=0.5, select="age_aware",
+                   quorum="adaptive", s_min=1)
+    assert not (sim.active & ~sim.available).any()
+    assert (np.diff(sim.times) >= 0).all()

@@ -289,3 +289,133 @@ def test_convergence_rate_order():
 
     t1, t2 = t_at(g0 * 0.5), t_at(g0 * 0.25)
     assert t2 <= max(6 * max(t1, 1), 40), (t1, t2)
+
+
+# ---------------- Taylor staleness compensation ----------------------------
+def test_compensation_none_matches_pr1_numerics():
+    """staleness_compensation='none' must reproduce the PR-1 round
+    bit-for-bit: these losses were captured from the PR-1 implementation
+    (seed 0, fixed masks) before the compensation path existed."""
+    ref = {
+        "constant": [12.361677, 9.110292, 10.071612, 7.969022,
+                     6.328120, 7.450919, 4.598397, 3.964060],
+        "poly": [12.361677, 9.110292, 10.071612, 7.969025,
+                 6.328112, 7.451040, 4.598487, 3.964108],
+    }
+    for decay, expect in ref.items():
+        fed = FedConfig(n_clients=6, active_frac=0.5, byzantine_frac=0.2,
+                        attack="sign_flip", staleness_decay=decay)
+        state, batch, step, key = make_problem(fed)
+        rng = np.random.RandomState(42)
+        losses = []
+        for t in range(8):
+            mask = jnp.asarray(rng.rand(6) < 0.6)
+            state, m = step(state, batch, jax.random.fold_in(key, t),
+                            act=mask)
+            losses.append(float(m["loss"]))
+        np.testing.assert_allclose(losses, expect, rtol=1e-5,
+                                   err_msg=f"decay={decay}")
+        assert state.comp is None
+
+
+def test_compensation_changes_stale_rounds():
+    """With inactive (stale) clients, the Taylor correction must move the
+    consensus relative to the uncompensated round."""
+    base = FedConfig(n_clients=6, active_frac=0.5, staleness_decay="poly")
+    taylor = FedConfig(n_clients=6, active_frac=0.5, staleness_decay="poly",
+                       staleness_compensation="taylor")
+    outs = {}
+    for name, fed in (("none", base), ("taylor", taylor)):
+        state, batch, step, key = make_problem(fed)
+        rng = np.random.RandomState(5)
+        for t in range(6):
+            mask = jnp.asarray(rng.rand(6) < 0.5)
+            state, m = step(state, batch, jax.random.fold_in(key, t),
+                            act=mask)
+        outs[name] = (np.asarray(jax.tree.leaves(state.z)[0]), m)
+    assert not np.allclose(outs["none"][0], outs["taylor"][0])
+    assert float(outs["taylor"][1]["compensation_norm"]) > 0
+    assert float(outs["none"][1]["compensation_norm"]) == 0
+
+
+def test_compensation_converges_under_attack():
+    fed = FedConfig(n_clients=8, active_frac=0.4, byzantine_frac=0.25,
+                    attack="sign_flip", staleness_decay="poly",
+                    staleness_compensation="taylor")
+    _, losses, m = run(fed, n_rounds=60)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] * 1.05
+    assert np.isfinite(float(m["compensation_norm"]))
+
+
+def test_compensation_cache_frozen_for_inactive():
+    """The momentum proxy is per-client: inactive clients keep the cached
+    direction from their last participation."""
+    fed = FedConfig(n_clients=4, active_frac=1.0,
+                    staleness_compensation="taylor")
+    state, batch, step, key = make_problem(fed)
+    state, _ = step(state, batch, key)                  # everyone active
+    act = jnp.asarray([True, True, False, False])
+    new, _ = step(state, batch, jax.random.fold_in(key, 1), act=act)
+    for c0, c1 in zip(jax.tree.leaves(state.comp), jax.tree.leaves(new.comp)):
+        a, b = np.asarray(c0), np.asarray(c1)
+        changed = ~np.all(np.isclose(a, b), axis=tuple(range(1, a.ndim)))
+        np.testing.assert_array_equal(changed, np.asarray(act))
+
+
+def test_compensation_clipped_extrapolation():
+    """Ages beyond compensation_clip must be treated as the clip: a stale
+    vector of 50 and one of clip rounds give the identical round."""
+    # constant decay isolates the compensation path: the only staleness-
+    # dependent term is the Taylor correction, which must saturate at clip
+    fed = FedConfig(n_clients=6, active_frac=1.0,
+                    staleness_compensation="taylor", compensation_clip=5.0)
+    state, batch, step, key = make_problem(fed)
+    warm, _ = step(state, batch, key)
+    clip_v = jnp.full((6,), 5.0, jnp.float32)
+    huge_v = jnp.full((6,), 50.0, jnp.float32)
+    out_c, _ = step(warm, batch, key, stale=clip_v)
+    out_h, _ = step(warm, batch, key, stale=huge_v)
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(out_c.z)[0]),
+        np.asarray(jax.tree.leaves(out_h.z)[0]), rtol=1e-6)
+    # below the clip the correction must still differ
+    out_lo, _ = step(warm, batch, key, stale=jnp.full((6,), 1.0, jnp.float32))
+    assert not np.allclose(np.asarray(jax.tree.leaves(out_lo.z)[0]),
+                           np.asarray(jax.tree.leaves(out_c.z)[0]))
+
+
+def test_compensation_validation():
+    fed = FedConfig(n_clients=4, staleness_compensation="newton")
+    state, batch, step, key = make_problem(fed)
+    with pytest.raises(ValueError, match="staleness_compensation"):
+        step(state, batch, key)
+    # a taylor config needs a state initialized with the comp cache
+    fed_none = FedConfig(n_clients=4)
+    state_none, batch, _, key = make_problem(fed_none)
+    fed_taylor = FedConfig(n_clients=4, staleness_compensation="taylor")
+    _, _, step_taylor, _ = make_problem(fed_taylor)
+    with pytest.raises(ValueError, match="FedState.comp"):
+        step_taylor(state_none._replace(comp=None), batch, key)
+
+
+def test_compensation_noop_when_fully_synchronous():
+    """With full participation every round no client is ever stale: the
+    taylor round must equal the uncompensated round bit-for-bit (the comp
+    cache updates, but never feeds back)."""
+    kw = dict(n_clients=5, active_frac=1.0, staleness_decay="constant")
+    fed_n = FedConfig(**kw)
+    fed_t = FedConfig(**kw, staleness_compensation="taylor")
+    state_n, batch, step_n, key = make_problem(fed_n)
+    state_t, _, step_t, _ = make_problem(fed_t)
+    act = jnp.ones((5,), bool)
+    for t in range(5):
+        kt = jax.random.fold_in(key, t)
+        state_n, m_n = step_n(state_n, batch, kt, act=act)
+        state_t, m_t = step_t(state_t, batch, kt, act=act)
+        np.testing.assert_allclose(float(m_n["loss"]), float(m_t["loss"]),
+                                   rtol=1e-6)
+    for a, b in zip(jax.tree.leaves((state_n.W, state_n.z, state_n.phi)),
+                    jax.tree.leaves((state_t.W, state_t.z, state_t.phi))):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-6)

@@ -63,6 +63,31 @@ def test_fig456_trains_on_simulator_masks():
     np.testing.assert_array_equal(meta["n_active_async"], masks_a.sum(1))
     np.testing.assert_array_equal(meta["n_active_sync"], masks_s.sum(1))
     assert (meta["staleness_async"][masks_a] == 0).all()
+    # scenario variants trained on their own schedules, same consistency
+    assert set(meta["variants"]) == set(fig456_async_efficiency.SCENARIOS)
+    for name, v in meta["variants"].items():
+        np.testing.assert_array_equal(v["n_active"], v["masks"].sum(1),
+                                      err_msg=name)
+        np.testing.assert_array_equal(v["quorum"], v["masks"].sum(1),
+                                      err_msg=name)
+        assert (v["staleness"][v["masks"]] == 0).all(), name
+
+
+def test_fig456_age_adaptive_scenario_bounds_staleness():
+    """The fig456 ``age_adaptive`` scenario (age-aware selection +
+    adaptive quorum) must bound max staleness over a long horizon, where
+    the PR-1 fastest/fixed policy starves the slow tail."""
+    from repro.core.async_engine import DelayModel, simulate
+    dm_kw, sim_kw, _ = fig456_async_efficiency.SCENARIOS["age_adaptive"]
+    n, frac, rounds = 8, fig456_async_efficiency.ACTIVE_FRAC, 150
+    dm = DelayModel(**{"n_clients": n, "hetero": 1.0, "seed": 0, **dm_kw})
+    aged = simulate("async", rounds, dm, active_frac=frac, **sim_kw)
+    fast = simulate("async", rounds, dm, active_frac=frac)
+    s = max(1, int(round(n * frac)))
+    thr = 2 * int(np.ceil(n / s))            # default age_threshold
+    bound = thr + int(np.ceil(n / s))        # overdue admissions may queue
+    assert aged.staleness.max() <= bound, aged.staleness.max()
+    assert fast.staleness.max() > bound      # fastest/fixed really starves
 
 
 def test_roofline_artifacts_complete():

@@ -1,0 +1,131 @@
+"""Checkpoint round-trips of the full post-PR-1/PR-2 ``FedState`` —
+including the staleness bookkeeping (``tau``), the Adam optimizer state
+(``opt``), and the Taylor-compensation momentum cache (``comp``) — through
+``checkpoint/checkpointer.py``."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (Checkpointer, restore_pytree,
+                                           save_pytree)
+from repro.configs import FedConfig, MLP_H1
+from repro.core import bafdp, init_fed_state
+from repro.core.byzantine import byz_mask
+from repro.core.privacy import gaussian_c3, perturb_inputs
+from repro.models.forecasting import init_forecaster, mse_loss
+
+CFG = MLP_H1
+
+
+def make_state(fed, warm_rounds=3, seed=0):
+    """A FedState a few real rounds in, so every field is non-trivial."""
+    key = jax.random.PRNGKey(seed)
+    state = init_fed_state(key, lambda k: init_forecaster(k, CFG), fed)
+    X = jax.random.normal(key, (fed.n_clients, 8, CFG.d_x))
+    Y = jnp.sum(X[..., :3], -1, keepdims=True) * 0.5
+    c3 = gaussian_c3(CFG.d_x + CFG.d_y, fed.dp_delta, fed.dp_sensitivity)
+
+    def local_loss(p, batch, k, eps):
+        x, y = batch
+        return mse_loss(p, perturb_inputs(k, x, eps, 0.02), y, CFG)
+
+    step = jax.jit(functools.partial(
+        bafdp.bafdp_round, local_loss=local_loss, fed=fed, c3=c3,
+        n_samples=100, d_dim=CFG.d_x + CFG.d_y,
+        byz_mask=byz_mask(fed.n_clients, fed.n_byzantine)))
+    rng = np.random.RandomState(7)
+    for t in range(warm_rounds):
+        mask = jnp.asarray(rng.rand(fed.n_clients) < 0.6)
+        state, _ = step(state, (X, Y), jax.random.fold_in(key, t), act=mask)
+    return state
+
+
+def assert_trees_identical(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    assert jax.tree.structure(a) == jax.tree.structure(b)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype, (x.dtype, y.dtype)
+        assert x.shape == y.shape, (x.shape, y.shape)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+FULL = FedConfig(n_clients=5, active_frac=0.6, omega_optimizer="adam",
+                 staleness_decay="poly", staleness_compensation="taylor")
+
+
+@pytest.mark.parametrize("fed", [
+    FedConfig(n_clients=5, active_frac=0.6),                   # opt/comp None
+    FedConfig(n_clients=5, omega_optimizer="adam"),            # adam m/v/count
+    FedConfig(n_clients=5, staleness_compensation="taylor",
+              staleness_decay="hinge"),                        # comp cache
+    FULL,                                                      # everything
+], ids=["sgd", "adam", "taylor", "adam+taylor"])
+def test_fed_state_round_trips(tmp_path, fed):
+    state = make_state(fed)
+    # warmed state has non-zero tau / t (and opt / comp where enabled)
+    assert int(state.t) == 3
+    assert np.asarray(state.tau).max() > 0
+    path = save_pytree(str(tmp_path / "state.npz"), state, step=3)
+    template = jax.tree.map(jnp.zeros_like, state)
+    restored = restore_pytree(path, template)
+    assert_trees_identical(state, restored)
+    # None fields stay None (empty subtrees, not materialized zeros)
+    if fed.omega_optimizer != "adam":
+        assert restored.opt is None
+    if fed.staleness_compensation == "none":
+        assert restored.comp is None
+    else:
+        assert restored.comp is not None
+
+
+def test_restored_state_trains_identically(tmp_path):
+    """Resuming from a checkpoint must continue bit-identically: one more
+    round from the restored state equals one more round from the live one."""
+    fed = FULL
+    state = make_state(fed)
+    path = save_pytree(str(tmp_path / "state.npz"), state)
+    restored = restore_pytree(path, jax.tree.map(jnp.zeros_like, state))
+
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (fed.n_clients, 8, CFG.d_x))
+    Y = jnp.sum(X[..., :3], -1, keepdims=True) * 0.5
+    c3 = gaussian_c3(CFG.d_x + CFG.d_y, fed.dp_delta, fed.dp_sensitivity)
+
+    def local_loss(p, batch, k, eps):
+        x, y = batch
+        return mse_loss(p, perturb_inputs(k, x, eps, 0.02), y, CFG)
+
+    step = jax.jit(functools.partial(
+        bafdp.bafdp_round, local_loss=local_loss, fed=fed, c3=c3,
+        n_samples=100, d_dim=CFG.d_x + CFG.d_y,
+        byz_mask=byz_mask(fed.n_clients, fed.n_byzantine)))
+    act = jnp.asarray([True, False, True, True, False])
+    out_a, m_a = step(state, (X, Y), key, act=act)
+    out_b, m_b = step(restored, (X, Y), key, act=act)
+    assert_trees_identical(out_a, out_b)
+    np.testing.assert_array_equal(float(m_a["loss"]), float(m_b["loss"]))
+
+
+def test_checkpointer_rolls_and_restores_latest(tmp_path):
+    fed = dataclasses.replace(FULL, n_clients=4)
+    state = make_state(fed, warm_rounds=2)
+    ck = Checkpointer(str(tmp_path / "ckpts"), keep=2)
+    for s in (1, 2, 3):
+        scaled = jax.tree.map(
+            lambda l: l if not jnp.issubdtype(l.dtype, jnp.floating)
+            else l * (1.0 + 0.1 * s), state)
+        ck.save(scaled, s)
+    assert ck.latest_step() == 3
+    restored, step = ck.restore_latest(jax.tree.map(jnp.zeros_like, state))
+    assert step == 3
+    expect = jax.tree.map(
+        lambda l: l if not jnp.issubdtype(l.dtype, jnp.floating)
+        else l * 1.3, state)
+    for a, b in zip(jax.tree.leaves(expect), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-6)

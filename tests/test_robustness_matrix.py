@@ -1,0 +1,136 @@
+"""Attack x aggregator robustness matrix (Section II-C x Section III).
+
+Sweeps every Byzantine attack in ``byzantine.ATTACKS`` against every
+aggregation rule — the ``aggregators.AGGREGATORS`` registry plus the
+attention rules (``fedatt`` / ``fedda``) and RSA's sign sum — on small
+synthetic client pytrees with a known honest consensus:
+
+* every robust rule must land within a bounded distance of the honest-only
+  FedAvg aggregate under EVERY attack;
+* plain ``fedavg`` must demonstrably break under ``scaled`` / ``gaussian``
+  (the bound is what makes robustness regressions visible to tier-1);
+* a hypothesis property test checks permutation invariance of every rule
+  (client order must never matter).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import given, settings, st   # hypothesis or graceful-skip stubs
+
+from repro.core import aggregators as agg
+from repro.core import byzantine as byz
+
+C = 12              # clients
+B = 2               # byzantine (<= trimmed_mean's per-side trim of 0.2*C)
+SIGMA = 0.1         # honest spread around the consensus
+ROBUST_BOUND = 1.0  # L2 distance every robust rule must stay within
+                    # (measured worst case across the matrix: ~0.40)
+BREAK_FACTOR = 4.0  # fedavg must exceed ROBUST_BOUND by this much
+                    # (measured: ~5.1 under gaussian, ~11.0 under scaled)
+
+
+def honest_updates(seed=0):
+    """Stacked client pytree clustered tightly around a known consensus."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    mu = {"w": jnp.full((4, 3), 2.0), "b": jnp.full((5,), -1.0)}
+    return {
+        "w": mu["w"][None] + SIGMA * jax.random.normal(k1, (C, 4, 3)),
+        "b": mu["b"][None] + SIGMA * jax.random.normal(k2, (C, 5)),
+    }
+
+
+def flat(tree):
+    return jnp.concatenate([jnp.ravel(l.astype(jnp.float32))
+                            for l in jax.tree.leaves(tree)])
+
+
+def dist(a, b):
+    return float(jnp.linalg.norm(flat(a) - flat(b)))
+
+
+def take_honest(stacked, mask):
+    keep = np.flatnonzero(~np.asarray(mask))
+    return jax.tree.map(lambda l: l[keep], stacked)
+
+
+MASK = byz.byz_mask(C, B)
+HONEST = honest_updates()
+HONEST_MEAN = agg.fedavg(take_honest(HONEST, MASK))
+# reference server / quasi-global models for the center-dependent rules:
+# what a converged server would hold (the honest consensus, roughly)
+SERVER = HONEST_MEAN
+QUASI = jax.tree.map(lambda l: l + 0.05, HONEST_MEAN)
+
+RULES = {
+    **{name: fn for name, fn in agg.AGGREGATORS.items()},
+    "krum": functools.partial(agg.krum, n_byzantine=B),
+    "centered_clip": lambda s: agg.centered_clip(s, SERVER, tau=2.0),
+    "fedatt": lambda s: agg.fedatt(s, SERVER),
+    "fedda": lambda s: agg.fedda(s, SERVER, QUASI),
+}
+ROBUST_RULES = sorted(set(RULES) - {"fedavg"})
+
+
+def corrupted(attack, seed=1):
+    return byz.apply_attack(attack, jax.random.PRNGKey(seed), HONEST, MASK)
+
+
+@pytest.mark.parametrize("attack", byz.ATTACKS)
+@pytest.mark.parametrize("rule", ROBUST_RULES)
+def test_robust_rule_bounded_under_attack(rule, attack):
+    """Every robust rule stays within ROBUST_BOUND of the honest-only
+    aggregate no matter what the B corrupted clients send."""
+    out = RULES[rule](corrupted(attack))
+    d = dist(out, HONEST_MEAN)
+    assert np.isfinite(flat(out)).all(), f"{rule} under {attack}: non-finite"
+    assert d <= ROBUST_BOUND, f"{rule} under {attack}: dist {d:.3f}"
+
+
+@pytest.mark.parametrize("attack", byz.ATTACKS)
+def test_rsa_sign_bounded_under_attack(attack):
+    """RSA's bounded messages: each corrupted client moves each coordinate
+    of the sign sum by at most 1, so |corrupted - honest-only| <= B."""
+    full = agg.rsa_sign(corrupted(attack), SERVER)
+    honest = agg.rsa_sign(take_honest(HONEST, MASK), SERVER)
+    gap = float(jnp.max(jnp.abs(flat(full) - flat(honest))))
+    assert gap <= B + 1e-6, f"rsa_sign under {attack}: gap {gap}"
+
+
+@pytest.mark.parametrize("attack", ["scaled", "gaussian"])
+def test_fedavg_breaks(attack):
+    """The linear mean has unbounded sensitivity: magnitude attacks drag it
+    far outside the robust envelope (this is the paper's motivation)."""
+    d = dist(agg.fedavg(corrupted(attack)), HONEST_MEAN)
+    assert d > BREAK_FACTOR * ROBUST_BOUND, f"fedavg under {attack}: {d:.3f}"
+
+
+def test_fedavg_exact_on_honest():
+    assert dist(agg.fedavg(take_honest(HONEST, MASK)), HONEST_MEAN) < 1e-5
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_rules_finite_on_clean_fleet(rule):
+    out = RULES[rule](HONEST)
+    assert np.isfinite(flat(out)).all()
+    assert dist(out, HONEST_MEAN) <= ROBUST_BOUND
+
+
+@given(st.integers(0, 10_000), st.sampled_from(sorted(RULES) + ["rsa_sign"]))
+@settings(max_examples=40, deadline=None)
+def test_aggregators_permutation_invariant(seed, rule):
+    """Client order must never matter — every rule is a function of the
+    SET of messages (krum picks the same point, sorts/sums/softmaxes are
+    order-free)."""
+    perm = np.random.RandomState(seed).permutation(C)
+    shuffled = jax.tree.map(lambda l: l[perm], HONEST)
+    if rule == "rsa_sign":
+        a = agg.rsa_sign(HONEST, SERVER)
+        b = agg.rsa_sign(shuffled, SERVER)
+    else:
+        a, b = RULES[rule](HONEST), RULES[rule](shuffled)
+    np.testing.assert_allclose(np.asarray(flat(a)), np.asarray(flat(b)),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,97 @@
+"""Deterministic-seed regression pins for ``async_engine.simulate``.
+
+The benchmarks train on these schedules: a refactor that silently
+reshuffles them would move every loss-vs-wall-clock curve while every
+behavioural test stays green.  These digests pin the exact times / active
+masks / staleness / availability produced for fixed seeds — in both quorum
+modes and both selection policies.  The ``fixed``+``fastest`` digests were
+captured from the PR-1 engine, so they double as the proof that the
+adaptive-asynchrony defaults reproduce PR-1 schedules bit-for-bit.
+"""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.async_engine import DelayModel, simulate
+
+
+def digest(sim) -> str:
+    h = hashlib.sha256()
+    # times rounded to 1e-6 s: float noise tolerance without hiding reorders
+    h.update(np.round(np.asarray(sim.times, np.float64), 6).tobytes())
+    h.update(np.asarray(sim.active, np.uint8).tobytes())
+    h.update(np.asarray(sim.staleness, np.int64).tobytes())
+    h.update(np.asarray(sim.available, np.uint8).tobytes())
+    return h.hexdigest()
+
+
+# ---- PR-1 schedules (defaults: quorum="fixed", select="fastest") ----------
+PR1_CASES = [
+    ("async", dict(n_clients=8, hetero=1.0, seed=0), dict(active_frac=0.6),
+     "e1384c68ecae81bdd56f11dca59607d67c93f14d485f50266456f864a8466b60"),
+    ("sync", dict(n_clients=8, hetero=1.0, seed=0), dict(active_frac=1.0),
+     "47e305915d223e30ffc682da09c77f8acc7d7fd9b133a4e36dc8115c967d8059"),
+    ("async", dict(n_clients=10, seed=7, dropout_prob=0.3, rejoin_prob=0.2),
+     dict(active_frac=0.5),
+     "8be6dd9bb856fd16825623c19e23cb24fccf09e3de6069946ac80b3503223562"),
+    ("async", dict(n_clients=6, seed=3, tail="pareto", pareto_shape=1.5),
+     dict(active_frac=0.5),
+     "1c778533682b56c5f0de223709e948a292aee5a30dbf5ad02853f455b2ce8a8e"),
+]
+
+
+@pytest.mark.parametrize("mode,dm_kw,sim_kw,ref", PR1_CASES,
+                         ids=["hetero", "sync", "flap", "pareto"])
+def test_pr1_schedules_pinned(mode, dm_kw, sim_kw, ref):
+    sim = simulate(mode, 40, DelayModel(**dm_kw), **sim_kw)
+    assert digest(sim) == ref
+
+
+# ---- adaptive quorum / age-aware schedules (captured from this engine) ----
+NEW_CASES = [
+    ("adaptive", dict(n_clients=12, seed=7, dropout_prob=0.4,
+                      rejoin_prob=0.1),
+     dict(active_frac=0.5, quorum="adaptive", s_min=1, s_max=12)),
+    ("age_aware", dict(n_clients=10, hetero=2.0, jitter=0.05, seed=2),
+     dict(active_frac=0.3, select="age_aware")),
+    ("adaptive+age", dict(n_clients=12, hetero=1.5, seed=3, tail="pareto",
+                          pareto_shape=1.2),
+     dict(active_frac=0.5, quorum="adaptive", s_min=2, s_max=12,
+          select="age_aware")),
+]
+
+
+def _quorum_digest(sim) -> str:
+    h = hashlib.sha256()
+    h.update(digest(sim).encode())
+    h.update(np.asarray(sim.quorum, np.int64).tobytes())
+    return h.hexdigest()
+
+
+NEW_REFS = {
+    "adaptive":
+        "3a79515e0345aecda720ab4ad302559473c8053f140c15d85b4c39e7d02d954f",
+    "age_aware":
+        "009aa545d63304a9abefeb6226df80299449d3f47976c0d09f1bd3c1e73e36e0",
+    "adaptive+age":
+        "9a9b025911692509b12adbab6b3b7cc1695104bf0b863a367f25dbbd9a10388f",
+}
+
+
+@pytest.mark.parametrize("name,dm_kw,sim_kw", NEW_CASES,
+                         ids=[c[0] for c in NEW_CASES])
+def test_adaptive_schedules_pinned(name, dm_kw, sim_kw):
+    sim = simulate("async", 60, DelayModel(**dm_kw), **sim_kw)
+    assert _quorum_digest(sim) == NEW_REFS[name], \
+        f"{name}: schedule changed — {_quorum_digest(sim)}"
+
+
+def test_repeated_calls_identical():
+    """simulate is a pure function of (mode, rounds, DelayModel, knobs)."""
+    dm_kw = dict(n_clients=9, hetero=1.3, seed=11, burst_prob=0.2)
+    kw = dict(active_frac=0.5, quorum="adaptive", s_min=2,
+              select="age_aware")
+    a = simulate("async", 50, DelayModel(**dm_kw), **kw)
+    b = simulate("async", 50, DelayModel(**dm_kw), **kw)
+    assert _quorum_digest(a) == _quorum_digest(b)

@@ -161,3 +161,27 @@ def test_shape_info_tuples():
     b, shapes = hlo_parse.shape_info("(s32[], f32[8,4]{1,0}, bf16[2,2])")
     assert b == 4 + 8 * 4 * 4 + 2 * 2 * 2
     assert [8, 4] in shapes
+
+
+def test_fed_state_specs_cover_compensation_cache():
+    """The Taylor-compensation cache (FedState.comp) must get client-axis
+    specs like W — a None spec under a real comp subtree breaks pjit's
+    pytree matching for the exact feature PR 2 adds."""
+    import dataclasses
+    arch = sorted(ARCHS)[0]
+    cfg = ARCHS[arch]
+    mesh = FakeMesh()
+    plan = make_plan(cfg, mesh)
+    fed = dataclasses.replace(
+        steps_lib.fed_config_for(cfg, plan.n_clients),
+        staleness_compensation="taylor", omega_optimizer="adam")
+    sds = steps_lib.fed_state_struct(cfg, fed)
+    specs = plan.fed_state_specs(sds)
+    assert specs.comp is not None
+    # spec tree structure mirrors the state tree structure exactly
+    assert jax.tree_util.tree_structure(
+        jax.tree.map(lambda _: 0, sds)) == jax.tree_util.tree_structure(
+        jax.tree.map(lambda _: 0, specs))
+    for spec, leaf in zip(jax.tree.leaves(specs.comp),
+                          jax.tree.leaves(sds.comp)):
+        assert spec[0] == plan.fed_axis, (spec, leaf.shape)

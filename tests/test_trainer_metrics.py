@@ -1,0 +1,66 @@
+"""Baseline-trainer metric semantics: the reported ``loss`` averages over
+the ACTIVE set only — inactive clients hold frozen server params (and, for
+Figs. 4-6 comparability, ``bafdp_round`` already reports active-only loss).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import FedConfig, MLP_H1
+from repro.core.trainers import BaselineTrainer
+from repro.models.forecasting import init_forecaster, mse_loss
+
+CFG = MLP_H1
+
+
+def _make(n_clients=6):
+    fed = FedConfig(n_clients=n_clients, attack="none")
+
+    def loss(p, b, k):
+        x, y = b
+        return mse_loss(p, x, y, CFG)
+
+    tr = BaselineTrainer(method="fedavg", loss=loss, fed=fed)
+    st = tr.init(init_forecaster(jax.random.PRNGKey(0), CFG))
+    key = jax.random.PRNGKey(1)
+    X = jax.random.normal(key, (n_clients, 16, CFG.d_x))
+    Y = jnp.sum(X[..., :3], -1, keepdims=True) * 0.5
+    return tr, st, (X, Y), key
+
+
+def test_loss_excludes_inactive_clients():
+    """Give one client absurd targets; as long as it is inactive, the
+    reported loss must not see it (pre-fix, the all-client mean did)."""
+    tr, st, (X, Y), key = _make()
+    Y_bad = Y.at[0].set(30.0)       # ~900 MSE vs O(1) for honest clients
+    step = tr.jitted_round()
+    act_without = jnp.asarray([False, True, True, True, True, True])
+    act_with = jnp.asarray([True, True, True, True, True, False])
+    _, m_without = step(st, (X, Y_bad), key, act=act_without)
+    _, m_with = step(st, (X, Y_bad), key, act=act_with)
+    assert float(m_without["loss"]) < 50, \
+        "inactive client's frozen-params loss leaked into the metric"
+    assert float(m_with["loss"]) > 50
+
+
+def test_loss_invariant_to_inactive_data():
+    """Changing ONLY an inactive client's data must leave the reported loss
+    untouched (its params are frozen server params; it is out of the mean)."""
+    tr, st, (X, Y), key = _make()
+    act = jnp.asarray([False, True, True, True, True, True])
+    step = tr.jitted_round()
+    _, m_a = step(st, (X, Y), key, act=act)
+    Y2 = Y.at[0].set(Y[0] * 100.0)
+    _, m_b = step(st, (X, Y2), key, act=act)
+    np.testing.assert_allclose(float(m_a["loss"]), float(m_b["loss"]),
+                               rtol=1e-6)
+    assert int(m_a["n_active"]) == 5
+
+
+def test_all_active_unchanged_semantics():
+    """With everyone active the metric is a plain mean — same as pre-fix."""
+    tr, st, batch, key = _make()
+    step = tr.jitted_round()
+    _, m = step(st, batch, key, act=jnp.ones(6, bool))
+    assert np.isfinite(float(m["loss"]))
+    assert int(m["n_active"]) == 6
