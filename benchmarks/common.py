@@ -7,7 +7,7 @@ import dataclasses
 import functools
 import os
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +17,7 @@ from repro.configs import FedConfig, ForecastConfig, MLP_H1, MLP_H24
 from repro.configs.forecast import ForecastConfig as FC
 from repro.core import bafdp, init_fed_state
 from repro.core.byzantine import byz_mask
+from repro.core.schedule import FederatedRun, Schedule
 from repro.core.privacy import gaussian_c3, perturb_inputs
 from repro.core.trainers import BaselineTrainer
 from repro.data import build_windows, make_dataset
@@ -67,6 +68,30 @@ def _check_masks(active_masks, rounds: int, n_clients: int):
     return _check_schedule(active_masks, rounds, n_clients, "active_masks")
 
 
+def _legacy_round_kwargs(schedule, active_masks, staleness, rounds: int,
+                         n_clients: int):
+    """Deprecated dense ``active_masks=``/``staleness=`` arrays -> a
+    per-round kwargs hook for :class:`FederatedRun` (bit-identical to the
+    pre-policy-API loop).  Prefer passing a sparse ``schedule=``."""
+    if active_masks is None and staleness is None:
+        return None
+    if schedule is not None:
+        raise ValueError(
+            "pass either schedule= or the deprecated active_masks=/"
+            "staleness= arrays, not both")
+    masks = _check_masks(active_masks, rounds, n_clients)
+    stale_v = _check_schedule(staleness, rounds, n_clients, "staleness",
+                              dtype=jnp.float32)
+
+    def round_kwargs(t):
+        kw = {} if masks is None else {"act": masks[t]}
+        if stale_v is not None:
+            kw["stale"] = stale_v[t]
+        return kw
+
+    return round_kwargs
+
+
 def forecast_cfg(model: str, horizon: int) -> ForecastConfig:
     base = MLP_H1 if horizon == 1 else MLP_H24
     return dataclasses.replace(base, model=model,
@@ -108,19 +133,20 @@ def eval_fed_state(state, cfg, test, scalers) -> Tuple[float, float]:
 def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
                 rounds: int = ROUNDS, seed: int = 0,
                 input_sigma: float = 0.02,
+                schedule: Optional[Schedule] = None,
                 active_masks: Optional[np.ndarray] = None,
                 staleness: Optional[np.ndarray] = None,
                 collect: Tuple[str, ...] = (),
                 optimizer: str = "adam"):
     """Returns (state, cfg, history dict).
 
-    ``active_masks`` (rounds, C) bool feeds an external event-driven
-    schedule (``core/async_engine.simulate().active``) into every round, so
-    training dynamics match the simulator's wall-clock bookkeeping; ``None``
-    keeps the internal uniformly-random sampler.  ``staleness`` (rounds, C)
-    optionally feeds the simulator's consumption-age vectors
-    (``SimResult.staleness``) into the Eq. (20) decay/compensation path
-    instead of the internal ``t - tau`` bookkeeping.
+    ``schedule`` (a sparse :class:`repro.core.schedule.Schedule`, e.g.
+    from ``build_schedule``) feeds the external event-driven schedule —
+    per-round active masks AND consumption-age staleness vectors — into
+    every round, so training dynamics match the simulator's wall-clock
+    bookkeeping; ``None`` keeps the round function's internal sampler
+    (``FedConfig.internal_select``).  ``active_masks``/``staleness`` are
+    the deprecated dense ``(rounds, C)`` equivalents, kept as a shim.
 
     Experimental setting per the paper Sec. V-D: Adam on the data/DRO
     gradient; grid-searched DRO scale (see FedConfig.dro_weight)."""
@@ -140,35 +166,31 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
         bafdp.bafdp_round, local_loss=local_loss, fed=fed, c3=c3,
         n_samples=train["x"].shape[1], d_dim=cfg.d_x + cfg.d_y,
         byz_mask=byz_mask(fed.n_clients, fed.n_byzantine)))
-    masks = _check_masks(active_masks, rounds, fed.n_clients)
-    stale_v = _check_schedule(staleness, rounds, fed.n_clients,
-                              "staleness", dtype=jnp.float32)
     rng = np.random.RandomState(seed)
-    hist: Dict[str, List[float]] = {k: [] for k in collect}
-    for t in range(rounds):
+
+    def batch_fn(t):
         x, y = client_batches(rng, train, BATCH)
-        kwargs = {} if masks is None else {"act": masks[t]}
-        if stale_v is not None:
-            kwargs["stale"] = stale_v[t]
-        state, m = step(state, (jnp.asarray(x), jnp.asarray(y)),
-                        jax.random.fold_in(key, t), **kwargs)
-        for k in collect:
-            if k == "eps_all":
-                hist[k].append(np.asarray(state.eps).copy())
-            elif k == "rmse":
-                r, _ = eval_fed_state(state, cfg, test, scalers)
-                hist[k].append(r)
-            elif k == "mae":
-                _, ma = eval_fed_state(state, cfg, test, scalers)
-                hist[k].append(ma)
-            else:
-                hist[k].append(float(m[k]))
+        return jnp.asarray(x), jnp.asarray(y)
+
+    run = FederatedRun(
+        step=step, rounds=rounds, schedule=schedule,
+        n_clients=fed.n_clients,
+        round_kwargs=_legacy_round_kwargs(schedule, active_masks, staleness,
+                                          rounds, fed.n_clients))
+    state, hist = run.run(
+        state, batch_fn, key, collect=collect,
+        derive={
+            "eps_all": lambda s, m: np.asarray(s.eps).copy(),
+            "rmse": lambda s, m: eval_fed_state(s, cfg, test, scalers)[0],
+            "mae": lambda s, m: eval_fed_state(s, cfg, test, scalers)[1],
+        })
     return state, cfg, hist
 
 
 def train_baseline(method: str, dataset: str, horizon: int, fed: FedConfig,
                    rounds: int = ROUNDS, seed: int = 0,
                    collect: Tuple[str, ...] = (),
+                   schedule: Optional[Schedule] = None,
                    active_masks: Optional[np.ndarray] = None):
     trainer_kind, backbone, dp_sigma = METHODS[method]
     assert trainer_kind != "bafdp"
@@ -185,17 +207,20 @@ def train_baseline(method: str, dataset: str, horizon: int, fed: FedConfig,
                          dp_sigma=dp_sigma)
     st = tr.init(init_forecaster(key, cfg))
     step = tr.jitted_round()
-    masks = _check_masks(active_masks, rounds, fed.n_clients)
     rng = np.random.RandomState(seed)
-    hist: Dict[str, List[float]] = {k: [] for k in collect}
-    for t in range(rounds):
+
+    def batch_fn(t):
         x, y = client_batches(rng, train, BATCH)
-        kwargs = {} if masks is None else {"act": masks[t]}
-        st, m = step(st, (jnp.asarray(x), jnp.asarray(y)),
-                     jax.random.fold_in(key, t), **kwargs)
-        for k in collect:
-            if k in m:
-                hist[k].append(float(m[k]))
+        return jnp.asarray(x), jnp.asarray(y)
+
+    # baseline rounds take act= but no stale= kwarg
+    run = FederatedRun(
+        step=step, rounds=rounds, schedule=schedule, feed_staleness=False,
+        n_clients=fed.n_clients,
+        round_kwargs=_legacy_round_kwargs(schedule, active_masks, None,
+                                          rounds, fed.n_clients))
+    st, hist = run.run(st, batch_fn, key, collect=collect,
+                       skip_missing=True)
     return st["server"], cfg, (test, scalers), hist
 
 

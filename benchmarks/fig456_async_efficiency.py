@@ -2,17 +2,18 @@
 loss / RMSE / MAE against simulated wall-clock with heterogeneous client
 latencies.
 
-``core/async_engine.simulate`` produces one event-driven schedule per mode
-(wall-clock timestamps + per-round active masks + staleness vectors) and the
-*same* masks (and, for the scenario variants, staleness vectors) are fed
-into ``train_bafdp`` — so the loss-vs-time curves and the timestamps they
+``core/schedule.build_schedule`` produces one sparse event-driven
+``Schedule`` per server mode (wall-clock timestamps + per-round winner
+lists) and the *same* schedule is fed into ``train_bafdp(schedule=...)``
+via ``FederatedRun`` — so the loss-vs-time curves and the timestamps they
 are plotted against come from a single schedule, not two unrelated ones.
 
-Beyond the sync-vs-async headline, ``SCENARIOS`` exercises the adaptive-
-asynchrony subsystem on the first dataset: a bounded-staleness fleet
-(``age_aware`` selection + adaptive quorum + Taylor staleness compensation),
-surge arrivals (bursty stragglers), and flapping availability
-(dropout/rejoin) — each trained on its own simulated schedule.
+Beyond the sync-vs-async headline, ``SCENARIOS`` exercises the federation
+policy API on the first dataset: a bounded-staleness fleet (age-aware
+selection + adaptive quorum + Taylor staleness compensation), surge
+arrivals (bursty stragglers), flapping availability (dropout/rejoin), and
+the FedBuff K-arrivals buffered server — each trained on its own
+simulated schedule.
 
 ``with_meta=True`` additionally returns per-dataset metadata (the masks,
 staleness, realized quorums, and per-round ``n_active`` the training loop
@@ -28,48 +29,62 @@ import numpy as np
 
 from benchmarks.common import ROUNDS, train_bafdp
 from repro.configs import FedConfig
-from repro.core.async_engine import DelayModel, simulate
+from repro.core.async_engine import DelayModel
+from repro.core.schedule import (AdaptiveQuorum, AgeAwareSelection,
+                                 FedBuffTrigger, QuorumTrigger, SyncTrigger,
+                                 build_schedule)
 
 ACTIVE_FRAC = 0.6
 
-# scenario variants: (DelayModel overrides, simulate kwargs, FedConfig
-# overrides).  All run async mode with the staleness vectors plumbed into
-# training (decay + Taylor compensation see the schedule's consumption ages).
+# scenario variants: (DelayModel overrides, trigger factory, FedConfig
+# overrides).  All run async server modes with the schedule's staleness
+# vectors plumbed into training (decay + Taylor compensation see the
+# schedule's consumption ages).
 SCENARIOS = {
     "age_adaptive": (           # bounded-staleness fleet
         dict(hetero=1.8, jitter=0.1),
-        dict(quorum="adaptive", s_min=2, select="age_aware"),
+        lambda: QuorumTrigger(active_frac=ACTIVE_FRAC,
+                              quorum=AdaptiveQuorum(s_min=2),
+                              selection=AgeAwareSelection()),
         dict(staleness_decay="poly", staleness_compensation="taylor")),
     "surge": (                  # bursty stragglers pile arrivals up
         dict(burst_prob=0.3, burst_scale=15.0),
-        dict(quorum="adaptive", s_min=2),
+        lambda: QuorumTrigger(active_frac=ACTIVE_FRAC,
+                              quorum=AdaptiveQuorum(s_min=2)),
         dict(staleness_decay="poly")),
     "flap": (                   # dropout/rejoin availability flapping
         dict(dropout_prob=0.25, rejoin_prob=0.4),
-        dict(quorum="adaptive", s_min=1),
+        lambda: QuorumTrigger(active_frac=ACTIVE_FRAC,
+                              quorum=AdaptiveQuorum(s_min=1)),
         dict(staleness_decay="hinge")),
+    "fedbuff": (                # buffered server: aggregate every K arrivals
+        dict(hetero=1.2),
+        lambda: FedBuffTrigger(buffer_k=5),
+        dict(staleness_decay="poly")),
 }
 
 
 def run_scenario(name: str, dataset: str, rounds: int, n: int = 8,
                  seed: int = 0) -> Tuple[str, Dict]:
-    dm_kw, sim_kw, fed_kw = SCENARIOS[name]
+    dm_kw, trigger_fn, fed_kw = SCENARIOS[name]
     t0 = time.time()
     dm = DelayModel(**{"n_clients": n, "hetero": 1.0, "seed": seed, **dm_kw})
-    sim = simulate("async", rounds, dm, active_frac=ACTIVE_FRAC, **sim_kw)
+    sched = build_schedule(rounds, dm, trigger_fn())
+    sim = sched.to_sim()
     fed = dataclasses.replace(
         FedConfig(n_clients=n, active_frac=ACTIVE_FRAC), **fed_kw)
-    _, _, h = train_bafdp(dataset, 1, fed, rounds,
-                          active_masks=sim.active, staleness=sim.staleness,
+    _, _, h = train_bafdp(dataset, 1, fed, rounds, schedule=sched,
                           collect=("data_loss", "n_active"))
     loss = np.asarray(h["data_loss"])
     us = (time.time() - t0) * 1e6 / max(rounds, 1)
     row = (f"fig456/{dataset}:{name},{us:.1f},"
            f"t_total_s={sim.times[-1]:.1f};max_stale={sim.staleness.max()};"
            f"mean_quorum={sim.quorum.mean():.2f};"
+           f"mean_arrivals={sched.arrivals.mean():.2f};"
            f"final_loss={loss[-1]:.4f}")
     meta = {"scenario": name, "masks": sim.active,
             "staleness": sim.staleness, "quorum": sim.quorum,
+            "arrivals": sched.arrivals,
             "n_active": np.asarray(h["n_active"])}
     return row, meta
 
@@ -82,18 +97,20 @@ def main(rounds: int = ROUNDS, quick: bool = False, with_meta: bool = False
         t0 = time.time()
         n = 8
         dm = DelayModel(n_clients=n, hetero=1.0, seed=0)
-        sim_async = simulate("async", rounds, dm, active_frac=ACTIVE_FRAC)
-        sim_sync = simulate("sync", rounds, dm, active_frac=1.0)
+        sched_async = build_schedule(
+            rounds, dm, QuorumTrigger(active_frac=ACTIVE_FRAC))
+        sched_sync = build_schedule(rounds, dm, SyncTrigger())
+        sim_async, sim_sync = sched_async.to_sim(), sched_sync.to_sim()
 
         # sync = all clients active each round; async = S of M — both train
-        # on the masks the simulator timestamped
+        # on the schedule the simulator timestamped
         fed_async = FedConfig(n_clients=n, active_frac=ACTIVE_FRAC)
         fed_sync = FedConfig(n_clients=n, active_frac=1.0)
         _, cfg, h_async = train_bafdp(dataset, 1, fed_async, rounds,
-                                      active_masks=sim_async.active,
+                                      schedule=sched_async,
                                       collect=("data_loss", "n_active"))
         _, _, h_sync = train_bafdp(dataset, 1, fed_sync, rounds,
-                                   active_masks=sim_sync.active,
+                                   schedule=sched_sync,
                                    collect=("data_loss", "n_active"))
         la, ls = np.asarray(h_async["data_loss"]), np.asarray(
             h_sync["data_loss"])

@@ -38,6 +38,15 @@ def main(rounds: int = 0, quick: bool = False) -> List[str]:
     rows.append(f"kernel/sign_agg_C{C}_D{D},{us:.1f},"
                 f"tpu_roofline_us={tpu_us:.1f}")
 
+    # staleness-weighted variant: same HBM traffic (the (C,) weight column
+    # is VMEM-resident), one extra VPU multiply per element
+    sw = jnp.linspace(0.1, 1.0, C)
+    f = jax.jit(lambda z, W, p, s: ref.sign_agg_weighted_ref(
+        z, W, p, s, 0.01, 0.01))
+    us = _time(f, z, W, phi, sw)
+    rows.append(f"kernel/sign_agg_weighted_C{C}_D{D},{us:.1f},"
+                f"tpu_roofline_us={tpu_us:.1f}")
+
     # flash attention fwd
     B, S, H, Dh = (2, 1024, 8, 64) if not quick else (1, 256, 4, 64)
     q = jax.random.normal(key, (B, S, H, Dh))

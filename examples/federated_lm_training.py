@@ -2,10 +2,16 @@
 (reduced smollm family) for a few hundred steps on synthetic token data —
 the paper's technique applied to the model zoo, on the host mesh.
 
-Includes checkpointing + resume and Byzantine clients.
+Includes checkpointing + resume and Byzantine clients.  Client
+participation comes from an event-driven ``core/schedule.Schedule``
+(quorum-of-S by default, ``--server fedbuff`` for the K-arrivals buffered
+server) driven through ``FederatedRun`` — the same loop the benchmarks
+use, here with integer step seeds (``key_fn``) and a checkpoint/resume
+``on_round`` hook.
 
     PYTHONPATH=src python examples/federated_lm_training.py \
-        [--arch smollm-360m] [--steps 300] [--scale smoke|100m]
+        [--arch smollm-360m] [--steps 300] [--scale smoke|100m] \
+        [--server quorum|fedbuff]
 """
 import argparse
 import dataclasses
@@ -21,7 +27,10 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import ARCHS, reduce_for_smoke
+from repro.core.async_engine import DelayModel
 from repro.core.fed_state import init_fed_state
+from repro.core.schedule import (FedBuffTrigger, FederatedRun, QuorumTrigger,
+                                 build_schedule)
 from repro.data.tokens import lm_batch
 from repro.launch import steps as steps_lib
 from repro.models import transformer as tr
@@ -47,6 +56,8 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt", default="/tmp/bafdp_lm_ckpt")
+    ap.add_argument("--server", default="quorum",
+                    choices=["quorum", "fedbuff"])
     args = ap.parse_args()
 
     cfg = scale_cfg(args.arch, args.scale)
@@ -70,21 +81,44 @@ def main():
         state, start = restored, s0
         print(f"resumed from step {start}")
 
+    # event-driven participation schedule (the same policy API the
+    # benchmarks use); FederatedRun replays it past `start` on resume so
+    # the staleness bookkeeping survives the restart
+    dm = DelayModel(n_clients=args.clients, hetero=1.0, seed=0)
+    trigger = QuorumTrigger(active_frac=fed.active_frac) \
+        if args.server == "quorum" else FedBuffTrigger(buffer_k=args.clients)
+    sched = build_schedule(args.steps, dm, trigger)
+
     rng = np.random.RandomState(1)
     t0 = time.time()
-    for t in range(start, args.steps):
+    last = {"m": None}
+
+    def batch_fn(t):
         b = lm_batch(rng, cfg, args.clients * args.batch, args.seq)
-        batch = {k: jnp.asarray(v).reshape(
+        return {k: jnp.asarray(v).reshape(
             (args.clients, args.batch) + v.shape[1:]) for k, v in b.items()}
-        state, m = step_fn(state, batch, jnp.asarray(t))
+
+    def on_round(t, st, m):
+        last["m"] = m
         if t % max(args.steps // 10, 1) == 0:
             print(f"  step {t:4d} loss={float(m['data_loss']):.4f} "
                   f"eps={float(m['eps_mean']):.2f} "
                   f"({(time.time()-t0)/(t-start+1):.2f}s/step)")
         if t and t % 100 == 0:
-            ck.save(state, t)
+            # label = completed-step count (st already contains step t), so
+            # resume starts at t + 1 instead of re-applying step t
+            ck.save(st, t + 1)
+
+    run = FederatedRun(step=step_fn, rounds=args.steps, schedule=sched,
+                       start=start, key_fn=lambda t: jnp.asarray(t),
+                       n_clients=args.clients)
+    state, _ = run.run(state, batch_fn, on_round=on_round)
+    if last["m"] is None:
+        print(f"nothing to do: checkpoint already at step {start} "
+              f">= --steps {args.steps}")
+        return
     ck.save(state, args.steps)
-    print(f"done: final loss {float(m['data_loss']):.4f}; "
+    print(f"done: final loss {float(last['m']['data_loss']):.4f}; "
           f"checkpoint at {args.ckpt}")
 
 

@@ -181,6 +181,13 @@ class FedConfig:
     byzantine_frac: float = 0.0    # B / (M + B)
     attack: str = "gaussian"       # byzantine attack kind
     active_frac: float = 0.6       # S / M per round (asynchrony)
+    # internal sampler policy (used only when no external schedule supplies
+    # the active set): "uniform" draws S-of-M uniformly (seed behaviour);
+    # "age_aware" admits clients whose age t - tau_i reached
+    # internal_age_threshold first (oldest first, remaining slots uniform),
+    # bounding max staleness without an engine-side schedule.
+    internal_select: str = "uniform"       # uniform | age_aware
+    internal_age_threshold: float = 0.0    # 0 -> 2 * ceil(C / S)
     # privacy
     privacy_budget_a: float = 30.0     # per-round upper bound on eps (Eq. 3)
     dp_delta: float = 1e-5

@@ -3,3 +3,7 @@ supporting pieces (DRO, LDP, Byzantine attacks, robust aggregation,
 async simulation)."""
 from repro.core.fed_state import FedState, init_fed_state  # noqa: F401
 from repro.core.bafdp import bafdp_round, make_round_fn  # noqa: F401
+from repro.core.schedule import (  # noqa: F401
+    AdaptiveQuorum, AgeAwareSelection, AggregationTrigger, FastestSelection,
+    FedBuffTrigger, FederatedRun, FixedQuorum, QuorumPolicy, QuorumTrigger,
+    Schedule, SelectionPolicy, SyncTrigger, build_schedule)

@@ -21,11 +21,14 @@ client fleet too — so wall-clock comparisons of BSFDP (sync) vs BAFDP
 
 ``simulate`` returns a :class:`SimResult` with per-round wall-clock
 timestamps, active masks, per-round staleness vectors (``t - tau_i``, 0 on
-the round a client participates), and the availability matrix.
-``benchmarks/fig456_async_efficiency.py`` feeds ``SimResult.active`` into
-``bafdp_round`` via ``benchmarks/common.train_bafdp(active_masks=...)``, so
-the loss-vs-wall-clock curves in Figs. 4-6 train on the *same* event-driven
-schedule that produced their timestamps.
+the round a client participates), and the availability matrix.  The server
+loop itself now lives in :mod:`repro.core.schedule` (the federation policy
+API: pluggable quorum/selection policies, a FedBuff K-arrivals trigger, and
+a sparse ``Schedule`` representation); ``simulate`` is the legacy dense
+shim over it.  ``benchmarks/fig456_async_efficiency.py`` builds sparse
+schedules through the policy API and trains on them via
+``schedule.FederatedRun``, so the loss-vs-wall-clock curves in Figs. 4-6
+train on the *same* event-driven schedule that produced their timestamps.
 """
 from __future__ import annotations
 
@@ -56,40 +59,62 @@ class DelayModel:
         return self.base_compute * np.exp(
             self.hetero * rng.randn(self.n_clients))
 
-    def round_delays(self, n_rounds: int) -> np.ndarray:
-        """(n_rounds, C) per-round completion latencies."""
-        rng = np.random.RandomState(self.seed + 1)
-        base = self.client_bases()[None, :]
-        shape = (n_rounds, self.n_clients)
+    def jitter_row(self, rng) -> np.ndarray:
+        """One (C,) multiplicative jitter row drawn from ``rng`` — the
+        single definition of the latency tail, shared by the dense matrix
+        builder below and the streaming row provider in core/schedule
+        (numpy fills matrices row-major, so sequential row draws from one
+        RandomState reproduce the matrix draw bit-for-bit)."""
         if self.tail == "pareto":
             # heavy-tailed jitter: Lomax bumps (mean 1/(shape-1) for
             # shape > 1, infinite mean for shape <= 1) give rare huge delays
-            jit = 1.0 + rng.pareto(self.pareto_shape, shape)
-        elif self.tail == "lognormal":
-            jit = np.exp(self.jitter * rng.randn(*shape))
-        else:
-            raise ValueError(f"unknown tail: {self.tail!r}")
-        if self.burst_prob > 0:
-            burst = rng.rand(*shape) < self.burst_prob
-            jit = np.where(burst, jit * self.burst_scale, jit)
+            return 1.0 + rng.pareto(self.pareto_shape, self.n_clients)
+        if self.tail == "lognormal":
+            return np.exp(self.jitter * rng.randn(self.n_clients))
+        raise ValueError(f"unknown tail: {self.tail!r}")
+
+    def burst_row(self, rng, jit: np.ndarray) -> np.ndarray:
+        """Apply one (C,) bursty-straggler row from ``rng`` to a jitter
+        row (no-op draw-free when burst_prob == 0)."""
+        if self.burst_prob <= 0:
+            return jit
+        burst = rng.rand(self.n_clients) < self.burst_prob
+        return np.where(burst, jit * self.burst_scale, jit)
+
+    def round_delays(self, n_rounds: int) -> np.ndarray:
+        """(n_rounds, C) per-round completion latencies."""
+        if n_rounds == 0:
+            return np.zeros((0, self.n_clients))
+        rng = np.random.RandomState(self.seed + 1)
+        base = self.client_bases()[None, :]
+        # all jitter rows are drawn before any burst row — the streaming
+        # path therefore matches this bit-for-bit only when burst_prob == 0
+        jit = np.stack([self.jitter_row(rng) for _ in range(n_rounds)])
+        jit = np.stack([self.burst_row(rng, j) for j in jit])
         return base * jit + self.comm
 
+    def avail_step(self, rng, cur: np.ndarray) -> np.ndarray:
+        """One dropout/rejoin Markov transition (in place on ``cur``);
+        keeps >= 1 client available (the fleet never goes completely
+        dark).  Shared by ``availability`` and the streaming provider."""
+        u = rng.rand(self.n_clients)
+        drop = cur & (u < self.dropout_prob)
+        rejoin = ~cur & (u < self.rejoin_prob)
+        cur = (cur & ~drop) | rejoin
+        if not cur.any():
+            cur[rng.randint(self.n_clients)] = True
+        return cur
+
     def availability(self, n_rounds: int) -> np.ndarray:
-        """(n_rounds, C) bool — dropout/rejoin Markov chain, >= 1 available
-        per round (the fleet never goes completely dark)."""
-        rng = np.random.RandomState(self.seed + 2)
+        """(n_rounds, C) bool — dropout/rejoin Markov chain."""
         C = self.n_clients
         avail = np.ones((n_rounds, C), bool)
         if self.dropout_prob <= 0:
             return avail
+        rng = np.random.RandomState(self.seed + 2)
         cur = np.ones(C, bool)
         for r in range(n_rounds):
-            u = rng.rand(C)
-            drop = cur & (u < self.dropout_prob)
-            rejoin = ~cur & (u < self.rejoin_prob)
-            cur = (cur & ~drop) | rejoin
-            if not cur.any():
-                cur[rng.randint(C)] = True
+            cur = self.avail_step(rng, cur)
             avail[r] = cur
         return avail
 
@@ -109,103 +134,54 @@ def simulate(mode: str, n_rounds: int, delays: DelayModel,
              age_threshold: Optional[int] = None) -> SimResult:
     """Event-driven schedule for ``n_rounds`` federated rounds.
 
+    .. deprecated:: this kwargs API is a thin shim over the federation
+       policy API in :mod:`repro.core.schedule` — prefer composing
+       ``build_schedule(n_rounds, delays, QuorumTrigger(...))`` directly
+       (which also unlocks the FedBuff K-arrivals trigger and the sparse
+       million-client representation).  The shim is kept because the PR-1/
+       PR-2 schedule digests are pinned against it bit-for-bit
+       (``tests/test_schedule_regression.py``).
+
     ``quorum`` — per-round S policy (async mode):
-      * ``fixed``: S = round(C * active_frac), the PR-1 behaviour;
-      * ``adaptive``: the server tracks an EWMA (rate ``quorum_beta``) of
-        the number of available clients whose results had arrived by each
-        round's close — admitted or not — and sets the next round's S to
-        that observed arrival rate, clipped to [``s_min``, ``s_max``].  A
-        surge of arrivals piling up during a long round grows the quorum
-        to absorb it; a thinning fleet (dropout) shrinks it.
+      * ``fixed``: S = round(C * active_frac) (:class:`schedule.FixedQuorum`);
+      * ``adaptive``: EWMA (rate ``quorum_beta``) of the arrivals observed
+        at each round's close, clipped to [``s_min``, ``s_max``]
+        (:class:`schedule.AdaptiveQuorum`).
 
     ``select`` — which S available clients win the round (async mode):
-      * ``fastest``: earliest completion times (PR-1 behaviour; fast
-        clients win repeatedly and slow ones starve);
-      * ``age_aware``: clients whose staleness has reached
-        ``age_threshold`` rounds are admitted first (oldest first, then by
-        completion time), ahead of fast repeat winners — the server waits
-        for them, trading wall-clock for a bound on max staleness.
-        ``age_threshold`` defaults to 2 * ceil(C / S).
+      * ``fastest``: earliest completion times
+        (:class:`schedule.FastestSelection`);
+      * ``age_aware``: clients whose staleness reached ``age_threshold``
+        (default 2 * ceil(C / S)) are admitted first, oldest first,
+        bounding max staleness (:class:`schedule.AgeAwareSelection`).
     """
-    C = delays.n_clients
-    d = delays.round_delays(n_rounds)
-    avail = delays.availability(n_rounds)
-    s = max(1, int(round(C * active_frac)))
-    times = np.zeros(n_rounds)
-    active = np.zeros((n_rounds, C), bool)
-    staleness = np.zeros((n_rounds, C), np.int64)
-    quorums = np.zeros(n_rounds, np.int64)
-    last_part = np.zeros(C, np.int64)
+    from repro.core import schedule as sched_lib
+
     if quorum not in ("fixed", "adaptive"):
         raise ValueError(f"unknown quorum mode: {quorum!r}")
     if select not in ("fastest", "age_aware"):
         raise ValueError(f"unknown selection policy: {select!r}")
     if mode == "sync":
-        # all available clients participate; the round closes at the slowest
-        t = 0.0
-        for r in range(n_rounds):
-            part = avail[r]
-            t += d[r][part].max()
-            times[r] = t
-            active[r] = part
-            last_part[part] = r
-            staleness[r] = r - last_part
-            quorums[r] = int(part.sum())
-        return SimResult(times, active, staleness, avail, quorums)
-    if mode != "async":
+        trigger = sched_lib.SyncTrigger()
+    elif mode == "async":
+        C = delays.n_clients
+        # PR-2 behaviour, kept for compat: the bounds are validated for
+        # BOTH quorum modes but only clamp the adaptive one — a fixed
+        # quorum ignores s_min/s_max (it is never adapted)
+        s_lo = max(1, s_min if s_min is not None else 1)
+        s_hi = min(C, s_max if s_max is not None else C)
+        if s_lo > s_hi:
+            raise ValueError(f"s_min={s_lo} > s_max={s_hi}")
+        qp = sched_lib.FixedQuorum() if quorum == "fixed" \
+            else sched_lib.AdaptiveQuorum(beta=quorum_beta,
+                                          s_min=s_min, s_max=s_max)
+        sp = sched_lib.FastestSelection() if select == "fastest" \
+            else sched_lib.AgeAwareSelection(age_threshold=age_threshold)
+        trigger = sched_lib.QuorumTrigger(active_frac=active_frac,
+                                          quorum=qp, selection=sp)
+    else:
         raise ValueError(mode)
-    s_lo = max(1, s_min if s_min is not None else 1)
-    s_hi = min(C, s_max if s_max is not None else C)
-    if s_lo > s_hi:
-        raise ValueError(f"s_min={s_lo} > s_max={s_hi}")
-    age_thr = age_threshold if age_threshold is not None \
-        else 2 * int(np.ceil(C / s))
-    # async: each client runs its own clock; the server closes a round when
-    # S results have arrived.  next_done[i] = when client i's result lands.
-    next_done = d[0].copy()
-    was_avail = np.ones(C, bool)
-    t = 0.0
-    s_cur = s if quorum == "fixed" else int(np.clip(s, s_lo, s_hi))
-    rate = float(s_cur)
-    for r in range(n_rounds):
-        # a rejoining client starts a fresh local round now — its pre-dropout
-        # completion time is void
-        rejoined = avail[r] & ~was_avail
-        if rejoined.any():
-            next_done[rejoined] = t + d[r][rejoined]
-        was_avail = avail[r]
-        cand = np.flatnonzero(avail[r])
-        k = min(s_cur, cand.size)
-        if select == "age_aware":
-            age = r - last_part
-            overdue = cand[age[cand] >= age_thr]
-            fresh = cand[age[cand] < age_thr]
-            overdue = overdue[np.lexsort((next_done[overdue],
-                                          -age[overdue]))]
-            fresh = fresh[np.argsort(next_done[fresh], kind="stable")]
-            order = np.concatenate([overdue, fresh])
-        else:
-            order = cand[np.argsort(next_done[cand], kind="stable")]
-        winners = order[:k]
-        t = max(t, next_done[winners].max())
-        times[r] = t
-        active[r, winners] = True
-        last_part[winners] = r
-        staleness[r] = r - last_part
-        quorums[r] = k
-        if quorum == "adaptive":
-            # arrivals observed at this round's close: every available
-            # client whose result is in, whether the server admitted it or
-            # not.  Pile-ups during a stretched round grow the quorum;
-            # a thinned fleet (dropout) shrinks it.
-            ready = avail[r] & (next_done <= t)
-            rate = (1.0 - quorum_beta) * rate + quorum_beta * float(
-                ready.sum())
-            s_cur = int(np.clip(int(round(rate)), s_lo, s_hi))
-        # winners immediately start their next local round
-        nxt = d[min(r + 1, n_rounds - 1)]
-        next_done[winners] = t + nxt[winners]
-    return SimResult(times, active, staleness, avail, quorums)
+    return sched_lib.build_schedule(n_rounds, delays, trigger).to_sim()
 
 
 def speedup_at(loss_sync: np.ndarray, t_sync: np.ndarray,

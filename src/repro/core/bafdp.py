@@ -28,6 +28,7 @@ sign collective, see distributed/collectives.py).
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Callable, Dict, Tuple
 
 import jax
@@ -54,6 +55,34 @@ def active_mask(key, n_clients: int, active_frac: float) -> jnp.ndarray:
     perm = jax.random.permutation(key, n_clients)
     rank = jnp.argsort(perm)
     return rank < s
+
+
+def default_age_threshold(n_clients: int, active_frac: float) -> int:
+    """2 * ceil(C / S) — the same default the engine-side
+    :class:`repro.core.schedule.AgeAwareSelection` resolves to."""
+    s = max(1, int(round(n_clients * active_frac)))
+    return 2 * math.ceil(n_clients / s)
+
+
+def active_mask_age_aware(key, n_clients: int, active_frac: float,
+                          age, age_threshold: float) -> jnp.ndarray:
+    """Age-aware S-of-M sampler: clients whose age ``t - tau_i`` reached
+    ``age_threshold`` are admitted first (oldest first), the remaining
+    slots are filled uniformly at random — so internally-sampled training
+    (no external schedule) also bounds max staleness at roughly
+    ``age_threshold + ceil(C / S)``.  Jittable: ``age`` may be traced."""
+    s = max(1, int(round(n_clients * active_frac)))
+    u = jax.random.uniform(key, (n_clients,))
+    agef = jnp.asarray(age).astype(jnp.float32)
+    # two-key sort, NOT a single fused score: adding u to age * 1e6 in
+    # float32 rounds the tie-break away past age ~7 and silently biases
+    # selection toward low client ids.  Primary key: overdue clients
+    # outrank every fresh one (fresh collapse to -1), older first;
+    # secondary key: the uniform draw breaks ties, so equally-overdue
+    # clients — and all fresh clients — are admitted uniformly at random.
+    prim = jnp.where(agef >= age_threshold, agef, -1.0)
+    idx = jnp.lexsort((u, -prim))
+    return jnp.zeros((n_clients,), bool).at[idx[:s]].set(True)
 
 
 def compensate_stale(W_msg: Any, comp: Any, age, fed: FedConfig) -> Any:
@@ -144,7 +173,17 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     C = byz_mask.shape[0]
     k_act, k_noise, k_byz = jax.random.split(key, 3)
     if act is None:
-        act = active_mask(k_act, C, fed.active_frac)          # (C,) bool
+        if fed.internal_select == "uniform":
+            act = active_mask(k_act, C, fed.active_frac)      # (C,) bool
+        elif fed.internal_select == "age_aware":
+            thr = fed.internal_age_threshold if \
+                fed.internal_age_threshold > 0 \
+                else default_age_threshold(C, fed.active_frac)
+            act = active_mask_age_aware(k_act, C, fed.active_frac,
+                                        state.t - state.tau, thr)
+        else:
+            raise ValueError(
+                f"unknown internal_select: {fed.internal_select!r}")
     else:
         act = jnp.asarray(act).astype(bool)
     t = state.t

@@ -34,6 +34,19 @@ def sign_agg(z, W, phi_mean, psi: float, alpha_z: float, impl: str = "auto"):
                          interpret=(impl == "interpret"))
 
 
+@functools.partial(jax.jit, static_argnames=("psi", "alpha_z", "impl"))
+def sign_agg_weighted(z, W, phi_mean, weights, psi: float, alpha_z: float,
+                      impl: str = "auto"):
+    """Staleness-weighted consensus update (decayed Eq. 20 sum);
+    ``weights``: (C,) per-client staleness weights s(t - tau_i)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.sign_agg_weighted_ref(z, W, phi_mean, weights, psi,
+                                         alpha_z)
+    return sa_k.sign_agg_weighted(z, W, phi_mean, weights, psi, alpha_z,
+                                  interpret=(impl == "interpret"))
+
+
 @functools.partial(jax.jit,
                    static_argnames=("causal", "window", "impl", "bq", "bk"))
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,

@@ -23,6 +23,26 @@ def sign_agg_ref(z: jnp.ndarray, W: jnp.ndarray, phi_mean: jnp.ndarray,
     return (z.astype(jnp.float32) - alpha_z * dz).astype(z.dtype)
 
 
+def sign_agg_weighted_ref(z: jnp.ndarray, W: jnp.ndarray,
+                          phi_mean: jnp.ndarray, weights: jnp.ndarray,
+                          psi: float, alpha_z: float) -> jnp.ndarray:
+    """Staleness-weighted BAFDP server update: the FedAsync-decayed
+    Eq. (20) sum, where client i's sign message is scaled by its
+    staleness weight s(t - tau_i) before the cross-client reduction:
+
+        z - alpha_z * (phi_mean + psi * sum_i s_i sign(z - w_i) / C)
+
+    ``weights``: (C,) in (0, 1]; all-ones reduces to ``sign_agg_ref``.
+    The sum is divided by C (not by sum(s_i)) — exactly the decayed sum
+    ``bafdp_round`` computes when ``staleness_decay != "constant"``.
+    """
+    sgn = jnp.sign(z[None, :].astype(jnp.float32) - W.astype(jnp.float32))
+    wsum = jnp.sum(sgn * weights[:, None].astype(jnp.float32),
+                   axis=0) / W.shape[0]
+    dz = phi_mean.astype(jnp.float32) + psi * wsum
+    return (z.astype(jnp.float32) - alpha_z * dz).astype(z.dtype)
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True, window: int = 0) -> jnp.ndarray:
     """Plain softmax attention (GQA-aware).

@@ -11,6 +11,10 @@ from HBM exactly once, in VPU-aligned (8, 128) tiles:
   full client column block W (C, BLOCK) into VMEM, fuses sign + reduction +
   AXPY and writes the updated z block — one pass, no intermediate HBM
   round-trips (the XLA fallback materializes sign(z-W) in HBM).
+
+``sign_agg_weighted`` is the staleness-weighted variant (the FedAsync-
+decayed Eq. 20 sum ``sum_i s(t - tau_i) sign(z - w_i) / C``): same tiling,
+with the (C,) per-client weight column resident in VMEM across the grid.
 """
 from __future__ import annotations
 
@@ -61,4 +65,57 @@ def sign_agg(z: jnp.ndarray, W: jnp.ndarray, phi_mean: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((1, Dp), z.dtype),
         interpret=interpret,
     )(z_p[None], W_p, phi_p[None])
+    return out[0, :D]
+
+
+def _weighted_kernel(z_ref, w_ref, phi_ref, sw_ref, out_ref, *, psi: float,
+                     alpha_z: float, n_clients: int):
+    z = z_ref[...].astype(jnp.float32)          # (1, BLK)
+    w = w_ref[...].astype(jnp.float32)          # (C, BLK)
+    phi = phi_ref[...].astype(jnp.float32)      # (1, BLK)
+    sw = sw_ref[...].astype(jnp.float32)        # (C, 1) — broadcasts on lanes
+    sgn = jnp.sign(z - w)
+    wsum = jnp.sum(sgn * sw, axis=0, keepdims=True) / n_clients
+    dz = phi + psi * wsum
+    out_ref[...] = (z - alpha_z * dz).astype(out_ref.dtype)
+
+
+def sign_agg_weighted(z: jnp.ndarray, W: jnp.ndarray, phi_mean: jnp.ndarray,
+                      weights: jnp.ndarray, psi: float, alpha_z: float, *,
+                      block: int = BLOCK,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Staleness-weighted consensus update (the FedAsync-decayed Eq. 20
+    sum): client i's sign message is scaled by its staleness weight
+    ``weights[i] = s(t - tau_i)`` inside the same one-pass fused tile loop
+    as :func:`sign_agg` — the (C, 1) weight column rides along in VMEM and
+    broadcasts over the lane dimension, so the decayed reduction costs no
+    extra HBM traffic over the unweighted kernel.
+
+    z: (D,); W: (C, D); phi_mean: (D,); weights: (C,).  Returns z' (D,).
+    """
+    (D,) = z.shape
+    C = W.shape[0]
+    pad = (-D) % block
+    if pad:
+        z_p = jnp.pad(z, (0, pad))
+        W_p = jnp.pad(W, ((0, 0), (0, pad)))
+        phi_p = jnp.pad(phi_mean, (0, pad))
+    else:
+        z_p, W_p, phi_p = z, W, phi_mean
+    Dp = D + pad
+    grid = (Dp // block,)
+    out = pl.pallas_call(
+        functools.partial(_weighted_kernel, psi=psi, alpha_z=alpha_z,
+                          n_clients=C),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((C, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((C, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Dp), z.dtype),
+        interpret=interpret,
+    )(z_p[None], W_p, phi_p[None], weights.reshape(C, 1))
     return out[0, :D]

@@ -94,11 +94,15 @@ def make_train_step(cfg: ArchConfig, fed: FedConfig
         sigma = sigma_for_eps(eps_i, c3)
         return tr.loss_fn(params_i, batch_i, cfg, noise=(key_i, sigma))
 
-    def train_step(state: FedState, batch, seed):
+    def train_step(state: FedState, batch, seed, act=None, stale=None):
+        # act/stale: optional external event-driven schedule rows
+        # (core/schedule.Schedule) — None keeps the internal sampler and
+        # leaves the dry-run lowering (3 positional args) unchanged
         key = jax.random.PRNGKey(seed)
         return bafdp_lib.bafdp_round(
             state, batch, key, local_loss=local_loss, fed=fed, c3=c3,
-            n_samples=4096, d_dim=cfg.d_model, byz_mask=mask)
+            n_samples=4096, d_dim=cfg.d_model, byz_mask=mask,
+            act=act, stale=stale)
 
     return train_step
 

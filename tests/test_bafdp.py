@@ -291,6 +291,104 @@ def test_convergence_rate_order():
     assert t2 <= max(6 * max(t1, 1), 40), (t1, t2)
 
 
+# ---------------- internal age-aware sampler --------------------------------
+def test_internal_age_aware_activates_overdue_clients():
+    """Any client whose age reached the threshold at round start must be
+    admitted (when the overdue set fits in S) — the sampler-level staleness
+    bound, with no external schedule at all."""
+    fed = FedConfig(n_clients=8, active_frac=0.5, internal_select="age_aware",
+                    internal_age_threshold=3.0)
+    state, batch, step, key = make_problem(fed)
+    for t in range(30):
+        age = np.asarray(state.t - state.tau)
+        overdue = np.flatnonzero(age >= 3.0)
+        state, m = step(state, batch, jax.random.fold_in(key, t))
+        assert int(m["n_active"]) == 4
+        if t == 0:
+            continue          # round 0: tau==0 cannot identify the active set
+        act = np.asarray(state.tau) == t          # tau resets on activation
+        assert act.sum() == 4
+        if overdue.size <= 4:
+            assert act[overdue].all(), (t, overdue, act)
+
+
+def test_internal_age_aware_bounds_staleness():
+    """Over a long horizon the age-aware sampler keeps max age under
+    threshold + ceil(C / S) (overdue admissions may queue for one sweep)."""
+    fed = FedConfig(n_clients=10, active_frac=0.3,
+                    internal_select="age_aware")
+    thr = bafdp.default_age_threshold(10, 0.3)
+    state, batch, step, key = make_problem(fed)
+    max_age = 0
+    for t in range(80):
+        age = int(np.max(np.asarray(state.t - state.tau)))
+        max_age = max(max_age, age)
+        state, _ = step(state, batch, jax.random.fold_in(key, t))
+    assert max_age <= thr + int(np.ceil(10 / 3)), (max_age, thr)
+
+
+def test_internal_age_aware_jit_stable():
+    """The age-aware branch traces once: t - tau is a traced argument,
+    not a recompile trigger."""
+    fed = FedConfig(n_clients=6, active_frac=0.5,
+                    internal_select="age_aware")
+    state, batch, _, key = make_problem(fed)
+    from repro.core.privacy import gaussian_c3
+
+    traces = {"n": 0}
+
+    def counted(st, b, k):
+        traces["n"] += 1
+        return bafdp.bafdp_round(
+            st, b, k,
+            local_loss=lambda p, bb, kk, e: mse_loss(
+                p, perturb_inputs(kk, bb[0], e, 0.02), bb[1], CFG),
+            fed=fed, c3=gaussian_c3(CFG.d_x + CFG.d_y, fed.dp_delta,
+                                    fed.dp_sensitivity),
+            n_samples=200, d_dim=CFG.d_x + CFG.d_y,
+            byz_mask=byz_mask(fed.n_clients, fed.n_byzantine))
+
+    step = jax.jit(counted)
+    for t in range(6):
+        state, _ = step(state, batch, jax.random.fold_in(key, t))
+    assert traces["n"] == 1
+
+
+def test_internal_age_aware_tie_break_is_uniform():
+    """Equally-overdue clients are admitted uniformly at random — a fused
+    float32 score (age * 1e6 + u) would round the tie-break away past age
+    ~7 and deterministically starve high client ids."""
+    C, thr = 64, 4.0
+    age = jnp.concatenate([jnp.full((32,), 8.0), jnp.zeros((32,))])
+    counts = np.zeros(C)
+    for seed in range(200):
+        counts += np.asarray(bafdp.active_mask_age_aware(
+            jax.random.PRNGKey(seed), C, 0.25, age, thr))
+    # 16 slots, 32 equally-overdue candidates: ~100 wins each over 200
+    assert counts[:32].min() > 60 and counts[:32].max() < 140, counts[:32]
+    assert counts[32:].sum() == 0      # fresh never beat an overdue client
+
+
+def test_internal_uniform_unchanged_and_unknown_select_raises():
+    """internal_select='uniform' is bit-identical to the seed sampler; an
+    unknown policy is a hard error."""
+    fed_a = FedConfig(n_clients=8, active_frac=0.5)
+    fed_b = FedConfig(n_clients=8, active_frac=0.5,
+                      internal_select="uniform")
+    state_a, batch, step_a, key = make_problem(fed_a)
+    state_b, _, step_b, _ = make_problem(fed_b)
+    for t in range(4):
+        kt = jax.random.fold_in(key, t)
+        state_a, m_a = step_a(state_a, batch, kt)
+        state_b, m_b = step_b(state_b, batch, kt)
+        np.testing.assert_allclose(float(m_a["loss"]), float(m_b["loss"]),
+                                   rtol=0)
+    bad = FedConfig(n_clients=4, internal_select="round_robin")
+    state, batch, step, key = make_problem(bad)
+    with pytest.raises(ValueError, match="internal_select"):
+        step(state, batch, key)
+
+
 # ---------------- Taylor staleness compensation ----------------------------
 def test_compensation_none_matches_pr1_numerics():
     """staleness_compensation='none' must reproduce the PR-1 round

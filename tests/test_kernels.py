@@ -25,6 +25,72 @@ def test_sign_agg(D, C, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("D", [128, 1024, 5000, 8193])
+@pytest.mark.parametrize("C", [2, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sign_agg_weighted(D, C, dtype):
+    """Pallas staleness-weighted sign reduction vs the jnp oracle."""
+    key = jax.random.PRNGKey(D * C)
+    z = jax.random.normal(key, (D,), dtype)
+    W = jax.random.normal(jax.random.fold_in(key, 1), (C, D), dtype)
+    phi = (jax.random.normal(jax.random.fold_in(key, 2), (D,)) * 0.01
+           ).astype(dtype)
+    sw = jax.random.uniform(jax.random.fold_in(key, 3), (C,),
+                            minval=0.05, maxval=1.0)
+    got = ops.sign_agg_weighted(z, W, phi, sw, 0.005, 0.01,
+                                impl="interpret")
+    want = ref.sign_agg_weighted_ref(z, W, phi, sw, 0.005, 0.01)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_sign_agg_weighted_unit_weights_match_unweighted():
+    """All-ones weights must reduce to the plain sign_agg kernel."""
+    key = jax.random.PRNGKey(11)
+    D, C = 2048, 8
+    z = jax.random.normal(key, (D,))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (C, D))
+    phi = jax.random.normal(jax.random.fold_in(key, 2), (D,)) * 0.01
+    a = ops.sign_agg_weighted(z, W, phi, jnp.ones((C,)), 0.005, 0.01,
+                              impl="interpret")
+    b = ops.sign_agg(z, W, phi, 0.005, 0.01, impl="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_sign_agg_weighted_matches_bafdp_decayed_sum():
+    """The kernel computes exactly the decayed Eq. 20 sum bafdp_round
+    builds in plain XLA: sum_i s_i sign(z - w_i) / C (divided by C, not
+    by sum(s_i))."""
+    key = jax.random.PRNGKey(3)
+    D, C, psi, a_z = 513, 6, 0.02, 0.05
+    z = jax.random.normal(key, (D,))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (C, D))
+    phi = jax.random.normal(jax.random.fold_in(key, 2), (D,)) * 0.01
+    sw = jnp.asarray([1.0, 0.5, 0.25, 1.0, 0.1, 0.75])
+    sgn = jnp.sign(z[None] - W)
+    manual = z - a_z * (phi + psi * jnp.sum(sgn * sw[:, None], axis=0) / C)
+    got = ops.sign_agg_weighted(z, W, phi, sw, psi, a_z, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(manual),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sign_agg_weighted_bounded_influence_scales_with_weight():
+    """RSA's bounded influence survives weighting: a corrupt client with
+    staleness weight s moves the update by at most 2 psi alpha s / C."""
+    key = jax.random.PRNGKey(7)
+    D, C, psi, a = 512, 8, 0.01, 0.1
+    z = jax.random.normal(key, (D,))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (C, D))
+    phi = jnp.zeros((D,))
+    sw = jnp.full((C,), 1.0).at[0].set(0.2)
+    base = ref.sign_agg_weighted_ref(z, W, phi, sw, psi, a)
+    evil = ref.sign_agg_weighted_ref(z, W.at[0].set(1e9), phi, sw, psi, a)
+    assert float(jnp.max(jnp.abs(evil - base))) \
+        <= 2 * psi * a * 0.2 / C + 1e-6
+
+
 @pytest.mark.parametrize("S,H,Hkv,Dh", [(128, 4, 2, 64), (256, 2, 2, 128),
                                         (256, 6, 2, 64)])
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])

@@ -1,0 +1,400 @@
+"""Federation policy API (core/schedule.py): policy-object schedules match
+the legacy shim's digest pins bit-for-bit, sparse<->dense round-trips are
+lossless, the FedBuff trigger honours its K-arrivals contract, the
+streaming build never allocates dense (rounds, C) state, and FederatedRun
+reproduces the hand-rolled train loop exactly."""
+import numpy as np
+import pytest
+
+from repro.core.async_engine import DelayModel, simulate
+from repro.core.schedule import (AdaptiveQuorum, AgeAwareSelection,
+                                 FastestSelection, FedBuffTrigger,
+                                 FederatedRun, FixedQuorum, QuorumTrigger,
+                                 Schedule, SyncTrigger, build_schedule)
+# the same hash the PR-1/PR-2 pins use — imported, not copied, so this
+# file keeps checking the identical digest the regression pins protect
+# (top-level module name: pytest inserts tests/ on sys.path, the same
+# mechanism the existing `from conftest import ...` files rely on)
+from test_schedule_regression import digest
+
+
+# ---- policy objects reproduce the pinned PR-1 / PR-2 schedules ------------
+def test_policy_api_matches_pr1_pins():
+    """QuorumTrigger(FixedQuorum, FastestSelection) == the PR-1 digests
+    pinned in test_schedule_regression.py — straight from policy objects,
+    no legacy kwargs involved."""
+    sched = build_schedule(
+        40, DelayModel(n_clients=8, hetero=1.0, seed=0),
+        QuorumTrigger(active_frac=0.6, quorum=FixedQuorum(),
+                      selection=FastestSelection()))
+    assert digest(sched.to_sim()) == \
+        "e1384c68ecae81bdd56f11dca59607d67c93f14d485f50266456f864a8466b60"
+    sched = build_schedule(40, DelayModel(n_clients=8, hetero=1.0, seed=0),
+                           SyncTrigger())
+    assert digest(sched.to_sim()) == \
+        "47e305915d223e30ffc682da09c77f8acc7d7fd9b133a4e36dc8115c967d8059"
+
+
+POLICY_CASES = [
+    ("fixed_fastest",
+     dict(n_clients=10, seed=7, dropout_prob=0.3, rejoin_prob=0.2),
+     lambda: QuorumTrigger(active_frac=0.5),
+     dict(active_frac=0.5)),
+    ("adaptive",
+     dict(n_clients=12, seed=7, dropout_prob=0.4, rejoin_prob=0.1),
+     lambda: QuorumTrigger(active_frac=0.5,
+                           quorum=AdaptiveQuorum(s_min=1, s_max=12)),
+     dict(active_frac=0.5, quorum="adaptive", s_min=1, s_max=12)),
+    ("age_aware",
+     dict(n_clients=10, hetero=2.0, jitter=0.05, seed=2),
+     lambda: QuorumTrigger(active_frac=0.3,
+                           selection=AgeAwareSelection()),
+     dict(active_frac=0.3, select="age_aware")),
+    ("adaptive+age",
+     dict(n_clients=12, hetero=1.5, seed=3, tail="pareto", pareto_shape=1.2),
+     lambda: QuorumTrigger(active_frac=0.5,
+                           quorum=AdaptiveQuorum(s_min=2, s_max=12),
+                           selection=AgeAwareSelection()),
+     dict(active_frac=0.5, quorum="adaptive", s_min=2, s_max=12,
+          select="age_aware")),
+]
+
+
+@pytest.mark.parametrize("name,dm_kw,trig_fn,sim_kw", POLICY_CASES,
+                         ids=[c[0] for c in POLICY_CASES])
+def test_policy_api_equals_legacy_shim(name, dm_kw, trig_fn, sim_kw):
+    """build_schedule(trigger).to_sim() is field-for-field identical to the
+    legacy simulate(...) kwargs shim (which the digest pins protect), so
+    the pins transfer to the policy API."""
+    sim_legacy = simulate("async", 60, DelayModel(**dm_kw), **sim_kw)
+    sim_policy = build_schedule(60, DelayModel(**dm_kw), trig_fn()).to_sim()
+    for a, b in zip(sim_legacy, sim_policy):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---- sparse <-> dense round-trip -------------------------------------------
+@pytest.mark.parametrize("name,dm_kw,trig_fn,sim_kw", POLICY_CASES,
+                         ids=[c[0] for c in POLICY_CASES])
+def test_sparse_dense_round_trip(name, dm_kw, trig_fn, sim_kw):
+    sched = build_schedule(50, DelayModel(**dm_kw), trig_fn())
+    sim = sched.to_sim()
+    back = Schedule.from_sim(sim)
+    # lossless up to admission order (which the dense form cannot carry)
+    assert back == sched.canonical(), name
+    sim2 = back.to_sim()
+    for a, b in zip(sim, sim2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_round_trip_preserves_dropout_state():
+    sched = build_schedule(
+        60, DelayModel(n_clients=10, seed=7, dropout_prob=0.3,
+                       rejoin_prob=0.2),
+        QuorumTrigger(active_frac=0.5))
+    sim = sched.to_sim()
+    assert (~sim.available).any(), "scenario produced no dropouts"
+    assert Schedule.from_sim(sim) == sched.canonical()
+    # sparse unavailability really is sparse: entries == dense false count
+    assert sched.unavailable_ids.size == int((~sim.available).sum())
+
+
+def test_schedule_rows_match_dense():
+    sched = build_schedule(
+        40, DelayModel(n_clients=9, hetero=1.2, seed=2),
+        QuorumTrigger(active_frac=0.4, selection=AgeAwareSelection(),
+                      quorum=AdaptiveQuorum(s_min=2)))
+    sim = sched.to_sim()
+    for r, (act, stale) in enumerate(sched.rows()):
+        np.testing.assert_array_equal(act, sim.active[r])
+        np.testing.assert_array_equal(stale, sim.staleness[r])
+
+
+def test_winner_ages_definition2():
+    """winner_ages[j] is Definition 2's d = r - tau_i at admission: equal
+    to the previous round's staleness + 1, or r on first participation."""
+    sched = build_schedule(
+        30, DelayModel(n_clients=8, hetero=1.5, seed=4),
+        QuorumTrigger(active_frac=0.4))
+    sim = sched.to_sim()
+    seen = np.zeros(8, bool)
+    for r in range(30):
+        w = sched.round_winners(r)
+        ages = sched.winner_ages[sched.offsets[r]:sched.offsets[r + 1]]
+        for i, d in zip(w, ages):
+            if not seen[i]:
+                assert d == r        # tau_i = 0 before first participation
+            elif r > 0:
+                assert d == sim.staleness[r - 1][i] + 1
+        seen[w] = True
+
+
+# ---- FedBuff trigger invariants --------------------------------------------
+def fedbuff_sched(k=4, rounds=50, **dm_kw):
+    dm = DelayModel(**{"n_clients": 8, "hetero": 1.5, "seed": 3, **dm_kw})
+    return build_schedule(rounds, dm, FedBuffTrigger(buffer_k=k))
+
+
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_fedbuff_aggregates_exactly_on_k_arrivals(k):
+    """Every round consumes exactly K buffered updates — the buffer fills
+    to K and drains completely, never carrying entries across rounds."""
+    sched = fedbuff_sched(k=k)
+    assert (sched.arrivals == k).all()
+    assert sched.offsets[-1] == k * sched.n_rounds
+
+
+def test_fedbuff_fast_clients_deliver_duplicates():
+    """With strong latency heterogeneity a fast client delivers several
+    updates into one buffer: arrivals > distinct participants somewhere."""
+    sched = fedbuff_sched(k=5, hetero=2.5)
+    assert (sched.arrivals > sched.quorum).any()
+    # dense conversion collapses duplicates into the bool mask
+    sim = sched.to_sim()
+    np.testing.assert_array_equal(sim.quorum, sim.active.sum(axis=1))
+
+
+def test_fedbuff_staleness_matches_definition2():
+    """Dense staleness from a FedBuff schedule obeys Definition 2's
+    bookkeeping: 0 on participation, +1 per skipped round."""
+    sim = fedbuff_sched(k=3, rounds=60).to_sim()
+    assert (sim.staleness[sim.active] == 0).all()
+    for r in range(1, 60):
+        skipped = ~sim.active[r]
+        np.testing.assert_array_equal(
+            sim.staleness[r][skipped], sim.staleness[r - 1][skipped] + 1)
+
+
+def test_fedbuff_times_nondecreasing_and_causal():
+    sched = fedbuff_sched(k=4, rounds=40)
+    assert (np.diff(sched.times) >= 0).all()
+    assert sched.times[0] > 0
+
+
+def test_fedbuff_respects_availability():
+    sched = fedbuff_sched(k=3, rounds=60, dropout_prob=0.3, rejoin_prob=0.2)
+    sim = sched.to_sim()
+    assert (~sim.available).any()
+    assert not (sim.active & ~sim.available).any()
+
+
+def test_fedbuff_k1_is_pure_async():
+    """K=1: one arrival per round — the fully-sequential FedBuff limit."""
+    sched = fedbuff_sched(k=1)
+    assert (sched.arrivals == 1).all()
+    assert (sched.quorum == 1).all()
+
+
+def test_fedbuff_validates_k():
+    with pytest.raises(ValueError, match="buffer_k"):
+        build_schedule(5, DelayModel(n_clients=4), FedBuffTrigger(buffer_k=0))
+
+
+def test_quorum_trigger_validates_s_target():
+    with pytest.raises(ValueError, match="s_target"):
+        build_schedule(5, DelayModel(n_clients=4),
+                       QuorumTrigger(s_target=0))
+
+
+def test_fedbuff_deterministic():
+    a = fedbuff_sched(k=4)
+    b = fedbuff_sched(k=4)
+    assert a == b
+
+
+@pytest.mark.parametrize("trig_fn", [SyncTrigger, QuorumTrigger,
+                                     FedBuffTrigger],
+                         ids=["sync", "quorum", "fedbuff"])
+def test_zero_rounds_builds_empty_schedule(trig_fn):
+    """rounds=0 (a sweep's degenerate endpoint) yields an empty Schedule
+    and an empty SimResult, not a crash."""
+    sched = build_schedule(0, DelayModel(n_clients=4, seed=0), trig_fn())
+    assert sched.n_rounds == 0 and sched.winner_ids.size == 0
+    sim = sched.to_sim()
+    assert sim.times.shape == (0,) and sim.active.shape == (0, 4)
+    assert simulate("sync", 0, DelayModel(n_clients=4)).times.shape == (0,)
+
+
+@pytest.mark.parametrize("trig_fn", [
+    lambda: FedBuffTrigger(buffer_k=5),
+    lambda: QuorumTrigger(active_frac=0.5, quorum=AdaptiveQuorum(s_min=2),
+                          selection=AgeAwareSelection()),
+], ids=["fedbuff", "quorum"])
+def test_schedule_prefix_stable(trig_fn):
+    """A shorter build is a prefix of a longer one (burst-free), so
+    FederatedRun(start=...) can resume against a re-built longer schedule
+    without diverging from the uninterrupted run.  This is what forces
+    FedBuff restarts to draw from the current round's latency row."""
+    dm_kw = dict(n_clients=8, hetero=1.5, seed=3, dropout_prob=0.2,
+                 rejoin_prob=0.3)
+    short = build_schedule(10, DelayModel(**dm_kw), trig_fn())
+    long = build_schedule(25, DelayModel(**dm_kw), trig_fn())
+    np.testing.assert_array_equal(short.times, long.times[:10])
+    E = short.offsets[-1]
+    np.testing.assert_array_equal(short.offsets, long.offsets[:11])
+    np.testing.assert_array_equal(short.winner_ids, long.winner_ids[:E])
+    np.testing.assert_array_equal(short.winner_ages, long.winner_ages[:E])
+
+
+# ---- streaming (million-client) build --------------------------------------
+def test_stream_build_matches_dense_when_burst_free():
+    """Row-wise RNG reproduces the dense build bit-for-bit for lognormal
+    and pareto fleets (numpy fills matrices row-major), including
+    dropout/rejoin availability chains."""
+    for dm_kw in (dict(n_clients=9, hetero=1.3, seed=11),
+                  dict(n_clients=7, seed=3, tail="pareto", pareto_shape=1.4),
+                  dict(n_clients=10, seed=7, dropout_prob=0.3,
+                       rejoin_prob=0.2)):
+        trig = lambda: QuorumTrigger(active_frac=0.5,
+                                     quorum=AdaptiveQuorum(s_min=2),
+                                     selection=AgeAwareSelection())
+        dense = build_schedule(40, DelayModel(**dm_kw), trig())
+        stream = build_schedule(40, DelayModel(**dm_kw), trig(), stream=True)
+        assert dense == stream, dm_kw
+
+
+def test_million_client_sparse_build_smoke(monkeypatch):
+    """CI smoke: a C=1_000_000 sparse build must not allocate any dense
+    (rounds, C) matrix — the dense DelayModel entry points are poisoned and
+    the resulting Schedule stays O(rounds * S)."""
+    def boom(self, n_rounds):
+        raise AssertionError("dense (rounds, C) allocation in sparse build")
+
+    monkeypatch.setattr(DelayModel, "round_delays", boom)
+    monkeypatch.setattr(DelayModel, "availability", boom)
+    C, rounds, s = 1_000_000, 3, 256
+    dm = DelayModel(n_clients=C, hetero=1.0, seed=0)
+    sched = build_schedule(
+        rounds, dm, QuorumTrigger(s_target=s), stream=True)
+    assert sched.winner_ids.size == rounds * s
+    assert (sched.arrivals == s).all()
+    assert sched.winner_ids.max() < C
+    assert (np.diff(sched.times) >= 0).all()
+    # FedBuff streams at scale too
+    sched_fb = build_schedule(rounds, dm, FedBuffTrigger(buffer_k=64),
+                              stream=True)
+    assert (sched_fb.arrivals == 64).all()
+
+
+# ---- FederatedRun -----------------------------------------------------------
+def _toy_step(state, batch, key, act=None, stale=None):
+    """Records exactly what it was fed; 'state' is the call log."""
+    state = state + [(np.asarray(act).copy() if act is not None else None,
+                      np.asarray(stale).copy() if stale is not None else None,
+                      np.asarray(key).copy())]
+    return state, {"loss": float(len(state)), "n_active":
+                   0 if act is None else int(np.asarray(act).sum())}
+
+
+def test_federated_run_feeds_schedule_rows():
+    import jax
+    sched = build_schedule(12, DelayModel(n_clients=6, hetero=1.0, seed=5),
+                           QuorumTrigger(active_frac=0.5))
+    sim = sched.to_sim()
+    run = FederatedRun(step=_toy_step, rounds=12, schedule=sched)
+    log, hist = run.run([], lambda t: None, jax.random.PRNGKey(0),
+                        collect=("loss", "n_active"))
+    assert len(log) == 12 and len(hist["loss"]) == 12
+    for r, (act, stale, _) in enumerate(log):
+        np.testing.assert_array_equal(act, sim.active[r])
+        np.testing.assert_array_equal(stale, sim.staleness[r])
+    np.testing.assert_array_equal(hist["n_active"], sim.quorum)
+
+
+def test_federated_run_matches_manual_loop():
+    """Driving bafdp_round through FederatedRun reproduces the hand-rolled
+    loop bit-for-bit (same keys, same masks, same staleness)."""
+    import jax
+    import jax.numpy as jnp
+    from test_bafdp import make_problem
+    from repro.configs import FedConfig
+
+    fed = FedConfig(n_clients=6, active_frac=0.5, staleness_decay="poly")
+    sched = build_schedule(8, DelayModel(n_clients=6, hetero=1.2, seed=1),
+                           QuorumTrigger(active_frac=0.5))
+    sim = sched.to_sim()
+
+    state_m, batch, step, key = make_problem(fed)
+    state_r = state_m
+    losses_m = []
+    for t in range(8):
+        state_m, m = step(state_m, batch, jax.random.fold_in(key, t),
+                          act=jnp.asarray(sim.active[t]),
+                          stale=jnp.asarray(sim.staleness[t], jnp.float32))
+        losses_m.append(float(m["loss"]))
+    run = FederatedRun(step=step, rounds=8, schedule=sched)
+    state_r, hist = run.run(state_r, lambda t: batch, key,
+                            collect=("loss",))
+    np.testing.assert_allclose(hist["loss"], losses_m, rtol=0)
+    import jax as _jax
+    for a, b in zip(_jax.tree.leaves(state_m), _jax.tree.leaves(state_r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_federated_run_rejects_short_schedule():
+    import jax
+    sched = build_schedule(3, DelayModel(n_clients=4, seed=0),
+                           QuorumTrigger(active_frac=0.5))
+    run = FederatedRun(step=_toy_step, rounds=5, schedule=sched)
+    with pytest.raises(ValueError, match="covers 3 rounds"):
+        run.run([], lambda t: None, jax.random.PRNGKey(0))
+
+
+def test_federated_run_rejects_client_mismatch():
+    """A schedule built for the wrong fleet size must fail loudly, not
+    broadcast a (C',) row into a (C,) round function."""
+    import jax
+    sched = build_schedule(3, DelayModel(n_clients=4, seed=0),
+                           QuorumTrigger(active_frac=0.5))
+    run = FederatedRun(step=_toy_step, rounds=3, schedule=sched,
+                       n_clients=8)
+    with pytest.raises(ValueError, match="4 clients"):
+        run.run([], lambda t: None, jax.random.PRNGKey(0))
+    # the benchmarks package needs the repo root on sys.path (the
+    # documented `python -m pytest` form); skip this half under bare pytest
+    common = pytest.importorskip("benchmarks.common")
+    from repro.configs import FedConfig
+    with pytest.raises(ValueError, match="4 clients"):
+        common.train_bafdp("milano", 1, FedConfig(n_clients=8), rounds=3,
+                           schedule=sched)
+
+
+def test_federated_run_start_replays_staleness():
+    """Resuming at start > 0 must not reset the staleness bookkeeping: the
+    first executed round sees the same rows as an uninterrupted run."""
+    import jax
+    sched = build_schedule(10, DelayModel(n_clients=6, hetero=1.0, seed=5),
+                           QuorumTrigger(active_frac=0.3))
+    sim = sched.to_sim()
+    run = FederatedRun(step=_toy_step, rounds=10, schedule=sched, start=6)
+    log, _ = run.run([], lambda t: None, jax.random.PRNGKey(0))
+    assert len(log) == 4
+    np.testing.assert_array_equal(log[0][0], sim.active[6])
+    np.testing.assert_array_equal(log[0][1], sim.staleness[6])
+
+
+def test_federated_run_key_fn_and_conflicts():
+    import jax
+    run = FederatedRun(step=_toy_step, rounds=3,
+                       key_fn=lambda t: np.asarray(t))
+    log, _ = run.run([], lambda t: None)
+    assert [int(k) for (_, _, k) in log] == [0, 1, 2]
+    sched = build_schedule(3, DelayModel(n_clients=4, seed=0),
+                           QuorumTrigger())
+    run = FederatedRun(step=_toy_step, rounds=3, schedule=sched,
+                       round_kwargs=lambda t: {})
+    with pytest.raises(ValueError, match="not both"):
+        run.run([], lambda t: None, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="base key"):
+        FederatedRun(step=_toy_step, rounds=2).run([], lambda t: None)
+
+
+def test_federated_run_collect_unknown_key_raises():
+    import jax
+    run = FederatedRun(step=_toy_step, rounds=2)
+    with pytest.raises(KeyError, match="nope"):
+        run.run([], lambda t: None, jax.random.PRNGKey(0),
+                collect=("nope",))
+    # skip_missing tolerates it (the baseline-trainer contract)
+    _, hist = run.run([], lambda t: None, jax.random.PRNGKey(0),
+                      collect=("nope",), skip_missing=True)
+    assert hist["nope"] == []
