@@ -137,7 +137,8 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
                 active_masks: Optional[np.ndarray] = None,
                 staleness: Optional[np.ndarray] = None,
                 collect: Tuple[str, ...] = (),
-                optimizer: str = "adam"):
+                optimizer: str = "adam",
+                feed_arrivals: Optional[bool] = None):
     """Returns (state, cfg, history dict).
 
     ``schedule`` (a sparse :class:`repro.core.schedule.Schedule`, e.g.
@@ -147,6 +148,8 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
     bookkeeping; ``None`` keeps the round function's internal sampler
     (``FedConfig.internal_select``).  ``active_masks``/``staleness`` are
     the deprecated dense ``(rounds, C)`` equivalents, kept as a shim.
+    ``feed_arrivals`` (per-round admitted-update counts as ``arrivals=``)
+    defaults to on exactly when ``fed.fedbuff_lr_norm`` needs them.
 
     Experimental setting per the paper Sec. V-D: Adam on the data/DRO
     gradient; grid-searched DRO scale (see FedConfig.dro_weight)."""
@@ -172,9 +175,14 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
         x, y = client_batches(rng, train, BATCH)
         return jnp.asarray(x), jnp.asarray(y)
 
+    # fedbuff_lr_norm needs the schedule's realized per-round K: feed it
+    # whenever the knob is on (a sum(act) fallback would undercount rounds
+    # where a fast client delivered twice into one buffer)
+    if feed_arrivals is None:
+        feed_arrivals = fed.fedbuff_lr_norm and schedule is not None
     run = FederatedRun(
         step=step, rounds=rounds, schedule=schedule,
-        n_clients=fed.n_clients,
+        n_clients=fed.n_clients, feed_arrivals=feed_arrivals,
         round_kwargs=_legacy_round_kwargs(schedule, active_masks, staleness,
                                           rounds, fed.n_clients))
     state, hist = run.run(

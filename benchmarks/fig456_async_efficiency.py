@@ -57,10 +57,11 @@ SCENARIOS = {
         lambda: QuorumTrigger(active_frac=ACTIVE_FRAC,
                               quorum=AdaptiveQuorum(s_min=1)),
         dict(staleness_decay="hinge")),
-    "fedbuff": (                # buffered server: aggregate every K arrivals
-        dict(hetero=1.2),
+    "fedbuff": (                # buffered server: aggregate every K arrivals,
+        dict(hetero=1.2),       # K/C-normalized step, int8 sign messages
         lambda: FedBuffTrigger(buffer_k=5),
-        dict(staleness_decay="poly")),
+        dict(staleness_decay="poly", fedbuff_lr_norm=True,
+             sign_message="int8")),
 }
 
 

@@ -47,6 +47,28 @@ def main(rounds: int = 0, quick: bool = False) -> List[str]:
     rows.append(f"kernel/sign_agg_weighted_C{C}_D{D},{us:.1f},"
                 f"tpu_roofline_us={tpu_us:.1f}")
 
+    # int8 wire format for the weighted message: the server streams the
+    # (C, D) message matrix as int8 + a (C,) f32 scale column — the
+    # roofline is byte-bound, so the f32-vs-int8 bytes ratio IS the
+    # projected TPU speedup on the dominant term
+    from repro.distributed.collectives import (encode_sign_message,
+                                               message_bytes)
+    msg = encode_sign_message(z, W, sw)
+    payload = jax.block_until_ready(msg.payload)
+    f = jax.jit(lambda z, q, s, p: ref.sign_agg_int8_ref(
+        z, q, s, p, 0.01, 0.01))
+    us = _time(f, z, payload, sw, phi)
+    wire_f32 = sum(message_bytes(C, D, "f32"))
+    wire_i8 = sum(message_bytes(C, D, "int8"))
+    bytes_f32 = wire_f32 + 2 * D * 4            # + z read, z' write
+    bytes_i8 = wire_i8 + 2 * D * 4
+    tpu_i8_us = bytes_i8 / V5E.hbm_bw * 1e6
+    rows.append(f"kernel/sign_agg_weighted_int8_C{C}_D{D},{us:.1f},"
+                f"tpu_roofline_us={tpu_i8_us:.1f};"
+                f"wire_bytes_f32={wire_f32};wire_bytes_int8={wire_i8};"
+                f"wire_ratio={wire_f32 / wire_i8:.2f};"
+                f"tpu_speedup_vs_f32={bytes_f32 / bytes_i8:.2f}")
+
     # flash attention fwd
     B, S, H, Dh = (2, 1024, 8, 64) if not quick else (1, 256, 4, 64)
     q = jax.random.normal(key, (B, S, H, Dh))

@@ -241,9 +241,44 @@ class FedConfig:
     compensation_beta: float = 0.9         # EWMA rate of the momentum proxy
     compensation_scale: float = 1.0        # scale on the Taylor term
     compensation_clip: float = 10.0        # max extrapolated rounds
+    # FedBuff server-side learning-rate normalization (arXiv:2106.06639
+    # Sec. 3): a K-arrivals buffered round carries K fresh updates out of C
+    # clients, so the consensus (z) step is scaled by K/C — K is the
+    # per-round arrivals count the driver feeds (``bafdp_round(arrivals=)``,
+    # ``FederatedRun(feed_arrivals=True)``), falling back to the distinct
+    # active count sum(act) when absent, which makes a quorum-closed round
+    # (K = S, no duplicate deliveries) identical under either accounting.
+    # Default off = bit-compatible with the unnormalized numerics.
+    fedbuff_lr_norm: bool = False
     # beyond-paper knobs
     local_steps: int = 1           # K local steps between consensus rounds
-    compress_signs: bool = False   # int8 sign-compressed consensus collective
+    # wire format of the Eq. (20) sign message crossing the client axis:
+    #   f32:  each client contributes s(d) * sign(z - w_i) as float32
+    #   int8: the message is quantized per client to an int8 payload
+    #         (sign in {-1, 0, +1}) plus ONE f32 scale s(d) — 1 byte per
+    #         coordinate on the wire instead of 4, lossless because a sign
+    #         message only takes three values (see distributed/collectives).
+    # Composes with any staleness_decay and with staleness_compensation.
+    sign_message: str = "f32"      # f32 | int8
+    # deprecated alias for sign_message="int8" (pre-PR-4 spelling); kept so
+    # existing configs/variants keep working.  resolved_sign_message merges
+    # the two.
+    compress_signs: bool = False
+
+    @property
+    def resolved_sign_message(self) -> str:
+        """The effective wire format after the deprecated ``compress_signs``
+        alias is folded in.  The alias takes precedence: a frozen dataclass
+        cannot distinguish an explicit ``sign_message="f32"`` from the
+        default, so ``compress_signs=True`` always means int8 — drop the
+        alias to control the format with ``sign_message`` alone."""
+        if self.sign_message not in ("f32", "int8"):
+            raise ValueError(
+                f"unknown sign_message: {self.sign_message!r} "
+                "(expected 'f32' or 'int8')")
+        if self.compress_signs:
+            return "int8"
+        return self.sign_message
 
     @property
     def n_byzantine(self) -> int:

@@ -21,9 +21,18 @@ Faithful pieces:
     (``FedConfig.staleness_compensation`` with the ``FedState.comp``
     momentum cache).
 
+The Eq. (20) consensus update routes through ONE dispatch for every
+sign-sum flavour — plain mean, staleness-decayed, and the quantized int8
+wire format — :func:`repro.kernels.ops.sign_consensus`, which runs the
+fused Pallas kernel on TPU and the XLA oracle elsewhere.  The wire format
+(``FedConfig.sign_message``) composes freely with ``staleness_decay`` and
+``staleness_compensation``: an int8 sign message is lossless (see
+distributed/collectives.py), so there is nothing to forbid.
+
 Beyond-paper options (recorded separately in EXPERIMENTS.md Section Perf):
-``local_steps`` K>1 (consensus every K rounds) and ``compress_signs`` (int8
-sign collective, see distributed/collectives.py).
+``local_steps`` K>1 (consensus every K rounds), ``sign_message="int8"``
+(1 byte/coordinate consensus collective), and ``fedbuff_lr_norm`` (scale
+the consensus step of a K-arrivals buffered round by K/C).
 """
 from __future__ import annotations
 
@@ -39,6 +48,7 @@ from repro.core import byzantine as byz_lib
 from repro.core import dro
 from repro.core.fed_state import FedState, consensus_gap
 from repro.core.privacy import eps_feasible, sigma_for_eps
+from repro.kernels import ops as kops
 
 # local_loss(params_i, batch_i, key_i, eps_i) -> scalar
 LocalLoss = Callable[[Any, Any, jnp.ndarray, jnp.ndarray], jnp.ndarray]
@@ -143,7 +153,9 @@ def _per_client_objective(local_loss: LocalLoss, fed: FedConfig, c3: float,
 def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
                 fed: FedConfig, c3: float, n_samples: int, d_dim: int,
                 byz_mask: jnp.ndarray, act: Any = None,
-                stale: Any = None) -> Tuple[FedState, Dict[str, jnp.ndarray]]:
+                stale: Any = None,
+                arrivals: Any = None) -> Tuple[FedState,
+                                               Dict[str, jnp.ndarray]]:
     """One asynchronous BAFDP round. ``batch`` leaves: (C, b, ...).
 
     ``act`` (C,) bool: externally supplied active set — e.g. the event-driven
@@ -157,11 +169,14 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     The Eq. (22) dual step is instead damped by each *returning* client's
     absence length ``t - state.tau`` (always from the internal bookkeeping,
     since the consumption-age vector is 0 wherever that step applies).
+
+    ``arrivals``: scalar count of updates this round consumed (a FedBuff
+    buffer's realized K, counting duplicate deliveries) — only read when
+    ``fed.fedbuff_lr_norm`` scales the consensus step by K/C; ``None``
+    falls back to the distinct active count ``sum(act)``, which equals K
+    whenever no client delivered twice (the quorum server).
     """
-    if fed.compress_signs and fed.staleness_decay != "constant":
-        raise ValueError(
-            "compress_signs requires staleness_decay='constant': the int8 "
-            "sign all-reduce is unweighted, so a decayed sum cannot use it")
+    sign_message = fed.resolved_sign_message      # validates the knob
     if fed.staleness_compensation not in ("none", "taylor"):
         raise ValueError(
             f"unknown staleness_compensation: {fed.staleness_compensation!r}")
@@ -342,27 +357,30 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
         # there, like the structurally consensus-free branch above
         comp_norm = jnp.where(do_consensus, num / max(den, 1.0), 0.0)
 
+    # Eq. (20) consensus: every sign-sum flavour (plain mean / decayed /
+    # int8 wire format) goes through ONE dispatch — the fused Pallas kernel
+    # on TPU, the XLA oracle elsewhere.  The decayed sum divides by C (not
+    # sum(s_i)), and the int8 message is lossless, so all branches agree
+    # with the pre-dispatch numerics bit-for-bit.
+    z_weights = None if fed.staleness_decay == "constant" else s_w
+    if fed.fedbuff_lr_norm:
+        # FedBuff server-side LR normalization: a buffered round carries K
+        # fresh updates out of C clients — scale the consensus step by K/C.
+        k_arr = jnp.sum(act).astype(jnp.float32) if arrivals is None \
+            else jnp.asarray(arrivals).astype(jnp.float32)
+        lr_scale = k_arr / C
+
     def z_step(z_l, w_l, phi_l):
-        sgn = jnp.sign(z_l[None].astype(jnp.float32) - w_l.astype(jnp.float32))
-        if fed.staleness_decay != "constant":
-            # FedAsync-style decay: client i's sign message enters the
-            # Eq. (20) sum scaled by s(t - tau_i), so the frozen params of
-            # long-inactive clients pull the consensus less.
-            sw = s_w.reshape((-1,) + (1,) * (sgn.ndim - 1))
-            sign_sum = jnp.sum(sgn * sw, axis=0) / C
-        elif fed.compress_signs:
-            # beyond-paper: the cross-client reduction runs on int8 signs
-            # (|sum| <= C < 128), so the all-reduce moves 1 byte/coordinate
-            # instead of 4 — RSA's bounded messages make this lossless.
-            # (requires the unweighted sum, hence constant decay only)
-            sign_sum = jnp.sum(sgn.astype(jnp.int8), axis=0,
-                               dtype=jnp.int8).astype(jnp.float32) / C
-        else:
-            sign_sum = jnp.mean(sgn, axis=0)                 # all-reduce over C
-        dz = jnp.mean(phi_l.astype(jnp.float32), axis=0) + fed.psi * sign_sum
-        z_new = z_l.astype(jnp.float32) - fed.alpha_z * dz
-        return jnp.where(do_consensus, z_new, z_l.astype(jnp.float32)) \
-            .astype(z_l.dtype)
+        zf = z_l.ravel()
+        phi_m = jnp.mean(phi_l.astype(jnp.float32), axis=0).ravel()
+        z_upd = kops.sign_consensus(zf, w_l.reshape(C, -1), phi_m,
+                                    z_weights, fed.psi, fed.alpha_z,
+                                    message=sign_message)
+        if fed.fedbuff_lr_norm:
+            z_upd = (zf.astype(jnp.float32) + lr_scale
+                     * (z_upd.astype(jnp.float32) - zf.astype(jnp.float32))
+                     ).astype(z_l.dtype)
+        return jnp.where(do_consensus, z_upd, zf).reshape(z_l.shape)
 
     z_new = jax.tree.map(z_step, state.z, W_srv, state.phi)
 

@@ -70,8 +70,12 @@ class Schedule:
     round the client participated in, 0 before first participation).
     FedBuff rounds may admit the same client twice (it delivered two
     updates into one buffer); dense conversion collapses duplicates into
-    the bool mask.  ``unavailable_ids``/``unavailable_offsets`` record the
-    dropout state sparsely (empty = the whole fleet was up).
+    the bool mask.  Ages are stamped per *arrival* event, not per drain:
+    a duplicate FedBuff delivery was computed after the client's earlier
+    delivery into the same buffer, so it carries age 0 while the first
+    occurrence carries the client's full absence length.
+    ``unavailable_ids``/``unavailable_offsets`` record the dropout state
+    sparsely (empty = the whole fleet was up).
     """
     n_clients: int
     times: np.ndarray               # (R,) wall-clock at round close
@@ -191,6 +195,25 @@ def _cat(chunks: List[np.ndarray]) -> np.ndarray:
     if not chunks:
         return np.zeros(0, np.int64)
     return np.concatenate([np.asarray(c, np.int64) for c in chunks])
+
+
+def _arrival_ages(r: int, last_part: np.ndarray,
+                  winners: np.ndarray) -> np.ndarray:
+    """Per-arrival admission ages for round ``r``'s winners (in admission
+    order).  The first delivery of client ``i`` carries Definition 2's
+    ``d = r - tau_i``; any later delivery by the same client *within the
+    same round* (a fast client refilling a FedBuff buffer) was computed
+    after its earlier delivery and therefore carries age 0 — stamping
+    every occurrence at the drain round would give both deliveries the
+    same stale age.  Duplicate-free rounds (quorum/sync triggers) are
+    unchanged."""
+    ages = r - last_part[winners]
+    if winners.size:
+        _, first = np.unique(winners, return_index=True)
+        repeat = np.ones(winners.size, bool)
+        repeat[first] = False
+        ages[repeat] = 0
+    return ages
 
 
 # ===========================================================================
@@ -492,7 +515,9 @@ class FedBuffTrigger:
     ``buffer_k`` updates have accumulated, then drains the buffer.  Each
     arriving client restarts its next local round immediately, so a fast
     client can deliver several updates into one buffer (duplicate winner
-    ids; dense conversion collapses them).  There is no selection step —
+    ids; dense conversion collapses them; each delivery's admission age is
+    stamped at its *arrival* event — the repeat delivery carries age 0, see
+    :func:`_arrival_ages`).  There is no selection step —
     every arrival is consumed — which makes the buffer size, not a quorum,
     the aggregation trigger.
 
@@ -580,7 +605,7 @@ def build_schedule(n_rounds: int, delays: DelayModel,
         b.t = t
         times[r] = t
         ids.append(winners)
-        ages.append(r - b.last_part[winners])
+        ages.append(_arrival_ages(r, b.last_part, winners))
         b.last_part[winners] = r
         offsets[r + 1] = offsets[r] + winners.size
         u = np.flatnonzero(~b.avail_row)
@@ -606,6 +631,10 @@ class FederatedRun:
       sampler (``FedConfig.internal_select``).
     * ``feed_staleness=False`` withholds ``stale=`` for round functions
       without the kwarg (the baseline trainers).
+    * ``feed_arrivals=True`` additionally feeds each round's admitted-update
+      count (``Schedule.arrivals[t]``, the realized FedBuff K counting
+      duplicate deliveries) as ``arrivals=`` — the input
+      ``FedConfig.fedbuff_lr_norm`` scales the consensus step by.
     * ``round_kwargs`` is the legacy escape hatch: a ``t -> dict`` hook
       that fully replaces the schedule-derived kwargs (used by the
       deprecated dense ``active_masks=``/``staleness=`` paths).
@@ -620,6 +649,7 @@ class FederatedRun:
     rounds: int
     schedule: Optional[Schedule] = None
     feed_staleness: bool = True
+    feed_arrivals: bool = False
     start: int = 0
     key_fn: Optional[Callable[[int], Any]] = None
     round_kwargs: Optional[Callable[[int], Dict[str, Any]]] = None
@@ -635,6 +665,11 @@ class FederatedRun:
         when supplied, else ``float(metrics[k])``)."""
         if self.schedule is not None and self.round_kwargs is not None:
             raise ValueError("pass either schedule or round_kwargs, not both")
+        if self.feed_arrivals and self.schedule is None:
+            raise ValueError(
+                "feed_arrivals=True needs a sparse schedule= (per-round "
+                "arrivals counts are not recoverable from dense masks, "
+                "which collapse duplicate FedBuff deliveries)")
         if self.schedule is not None \
                 and self.schedule.n_rounds < self.rounds:
             raise ValueError(
@@ -653,6 +688,8 @@ class FederatedRun:
         derive = derive or {}
         hist: Dict[str, List[Any]] = {k: [] for k in collect}
         rows = self.schedule.rows() if self.schedule is not None else None
+        arrivals = self.schedule.arrivals \
+            if self.schedule is not None and self.feed_arrivals else None
         for t in range(self.rounds):
             if rows is not None:
                 act, stale = next(rows)
@@ -665,6 +702,8 @@ class FederatedRun:
                 kwargs["act"] = act
                 if self.feed_staleness:
                     kwargs["stale"] = stale
+                if arrivals is not None:
+                    kwargs["arrivals"] = np.int32(arrivals[t])
             kt = self.key_fn(t) if self.key_fn is not None \
                 else jax.random.fold_in(key, t)
             state, m = self.step(state, batch_fn(t), kt, **kwargs)

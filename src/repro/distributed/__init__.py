@@ -1,2 +1,5 @@
 from repro.distributed.sharding import (  # noqa: F401
     ShardingPlan, make_plan, named, greedy_spec)
+from repro.distributed.collectives import (  # noqa: F401
+    SignMessage, decode_sign_message, encode_sign_message, message_bytes,
+    sign_sum)

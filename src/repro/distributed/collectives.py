@@ -1,0 +1,98 @@
+"""Wire formats for the cross-client consensus collective (Eq. 20).
+
+The BAFDP server consumes one message per client per consensus round:
+``m_i = s(d_i) * sign(z - w_i)`` — the staleness-decayed RSA sign message.
+Because a sign message takes only the three values ``{-s_i, 0, +s_i}``, it
+admits an *exact* int8 quantization: an int8 payload holding the sign in
+``{-1, 0, +1}`` plus a single f32 per-client scale ``s_i`` (the absmax of
+the message).  On the wire that is 1 byte per coordinate plus 4 bytes per
+client instead of 4 bytes per coordinate — a 4x cut on the dominant term —
+and the dequantization ``payload * s_i`` reproduces the f32 message
+bit-for-bit, so decay, Taylor compensation, and compression compose with
+no accuracy knob.
+
+The reduction NEVER accumulates in the wire dtype: an int8 accumulator
+silently wraps once ``|sum_i sign_i| >= 128``, i.e. for any fleet of
+``C >= 128`` clients (the pre-PR-4 bug).  The unweighted sum accumulates
+in int32 (exact for any realistic C); the weighted sum dequantizes and
+accumulates in f32 — identical to the uncompressed decayed sum, since the
+dequantized values ARE the f32 messages.
+
+These helpers are the single source of truth for the format: the XLA
+oracle (``kernels/ref.sign_agg_int8_ref``), the fused Pallas kernel
+(``kernels/sign_agg.sign_agg_weighted_int8``), and the benchmark byte
+accounting (``benchmarks/kernel_bench``) all build on them.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+class SignMessage(NamedTuple):
+    """The int8 consensus message crossing the client axis.
+
+    ``payload``: (C, D) int8, the per-coordinate sign in {-1, 0, +1}.
+    ``scale``:   (C,) f32 per-client dequantization scale — the staleness
+                 weight ``s(d_i)`` — or ``None`` for the unweighted
+                 (constant-decay) message, whose reduction then runs as an
+                 exact int32 sum.
+    """
+    payload: jnp.ndarray
+    scale: Optional[jnp.ndarray]
+
+
+def encode_sign_message(z: jnp.ndarray, W: jnp.ndarray,
+                        weights: Optional[jnp.ndarray] = None) -> SignMessage:
+    """Client-side encode: quantize ``s_i * sign(z - w_i)`` to the int8
+    wire format.  ``z``: (D,); ``W``: (C, D); ``weights``: (C,) or None.
+
+    The quantizer is absmax per message: the payload is the sign (exactly
+    representable in int8) and the scale is the message's magnitude
+    ``s_i``.  Lossless — ``decode`` reproduces the f32 message bit-for-bit.
+    """
+    sgn = jnp.sign(z[None, :].astype(jnp.float32) - W.astype(jnp.float32))
+    payload = sgn.astype(jnp.int8)
+    scale = None if weights is None else weights.astype(jnp.float32)
+    return SignMessage(payload=payload, scale=scale)
+
+
+def decode_sign_message(msg: SignMessage) -> jnp.ndarray:
+    """Dequantize back to the (C, D) f32 message ``s_i * sign(z - w_i)``."""
+    m = msg.payload.astype(jnp.float32)
+    if msg.scale is None:
+        return m
+    return m * msg.scale[:, None]
+
+
+def sign_sum(msg: SignMessage, n_clients: int) -> jnp.ndarray:
+    """Server-side reduce: ``sum_i s_i sign(z - w_i) / C`` from the wire
+    format, accumulating OUTSIDE the int8 wire dtype.
+
+    Unweighted messages sum in int32 — exact for any C (the int8
+    accumulator of the pre-PR-4 path wrapped at C >= 128).  Weighted
+    messages dequantize per client and accumulate in f32, which is
+    bit-identical to the uncompressed decayed sum.
+    """
+    if msg.scale is None:
+        s = jnp.sum(msg.payload.astype(jnp.int32), axis=0,
+                    dtype=jnp.int32).astype(jnp.float32)
+    else:
+        s = jnp.sum(msg.payload.astype(jnp.float32) * msg.scale[:, None],
+                    axis=0)
+    return s / n_clients
+
+
+def message_bytes(n_clients: int, dim: int, message: str,
+                  weighted: bool = True) -> Tuple[int, int]:
+    """(bytes moved across the client axis, per-client side-channel bytes)
+    for one consensus round — the quantity the int8 format shrinks.
+    The f32 scale column only rides along for weighted messages; the
+    unweighted (constant-decay) format is pure int8 payload
+    (``SignMessage.scale is None``)."""
+    if message == "f32":
+        return n_clients * dim * 4, 0
+    if message == "int8":
+        return n_clients * dim * 1, n_clients * 4 if weighted else 0
+    raise ValueError(f"unknown sign message format: {message!r}")

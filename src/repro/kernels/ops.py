@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import collectives
 from repro.kernels import decode_attention as dec_k
 from repro.kernels import flash_attention as fa_k
 from repro.kernels import ref
@@ -23,6 +24,43 @@ def _resolve(impl: str) -> str:
     if impl != "auto":
         return impl
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("psi", "alpha_z", "message", "impl"))
+def sign_consensus(z, W, phi_mean, weights, psi: float, alpha_z: float,
+                   message: str = "f32", impl: str = "auto"):
+    """The unified Eq. (20) consensus-path dispatch: every sign-sum flavour
+    — plain mean (``weights=None``), staleness-decayed, and the int8 wire
+    format — funnels through one entry point that picks the fused Pallas
+    kernel on TPU and the XLA oracle elsewhere.
+
+    z: (D,); W: (C, D) stacked client params (Byzantine corruption and any
+    Taylor compensation already applied); phi_mean: (D,) mean dual;
+    weights: (C,) staleness weights s(d) or None for the unweighted sum.
+    ``message``: "f32" moves the 4-byte message; "int8" quantizes each
+    client's s(d)*sign(z - w_i) to an int8 payload + per-client f32 scale
+    (lossless for sign messages, 1 byte/coordinate on the wire).  Returns
+    z' = z - alpha_z * (phi_mean + psi * sum_i s_i sign(z - w_i) / C).
+    """
+    impl = _resolve(impl)
+    if message == "int8":
+        # client-side encode happens in f32 regardless of impl; the wire
+        # format (and on TPU the server's HBM read) is what shrinks
+        msg = collectives.encode_sign_message(z, W, weights)
+        if impl == "xla":
+            return ref.sign_agg_int8_ref(z, msg.payload, msg.scale,
+                                         phi_mean, psi, alpha_z)
+        return sa_k.sign_agg_weighted_int8(z, msg.payload, msg.scale,
+                                           phi_mean, psi, alpha_z,
+                                           interpret=(impl == "interpret"))
+    if message != "f32":
+        raise ValueError(f"unknown sign message format: {message!r}")
+    # impl is already resolved (idempotent through the wrappers' _resolve)
+    if weights is None:
+        return sign_agg(z, W, phi_mean, psi, alpha_z, impl=impl)
+    return sign_agg_weighted(z, W, phi_mean, weights, psi, alpha_z,
+                             impl=impl)
 
 
 @functools.partial(jax.jit, static_argnames=("psi", "alpha_z", "impl"))

@@ -43,6 +43,27 @@ def sign_agg_weighted_ref(z: jnp.ndarray, W: jnp.ndarray,
     return (z.astype(jnp.float32) - alpha_z * dz).astype(z.dtype)
 
 
+def sign_agg_int8_ref(z: jnp.ndarray, payload: jnp.ndarray,
+                      scale, phi_mean: jnp.ndarray,
+                      psi: float, alpha_z: float) -> jnp.ndarray:
+    """BAFDP server update from the int8 wire format (the quantized
+    Eq. (20) message, see :mod:`repro.distributed.collectives`).
+
+    ``payload``: (C, D) int8 signs in {-1, 0, +1}; ``scale``: (C,) f32
+    per-client dequant scales (the staleness weights s(d)) or ``None`` for
+    the unweighted message.  The reduction accumulates in int32 (unweighted)
+    or f32 (weighted) — NEVER in the int8 wire dtype, which wraps for
+    C >= 128.  Given ``payload = sign(z - w_i)`` and ``scale = s``, this is
+    bit-identical to :func:`sign_agg_weighted_ref` (the quantization of a
+    sign message is lossless).
+    """
+    from repro.distributed.collectives import SignMessage, sign_sum
+    ssum = sign_sum(SignMessage(payload=payload, scale=scale),
+                    payload.shape[0])
+    dz = phi_mean.astype(jnp.float32) + psi * ssum
+    return (z.astype(jnp.float32) - alpha_z * dz).astype(z.dtype)
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True, window: int = 0) -> jnp.ndarray:
     """Plain softmax attention (GQA-aware).

@@ -47,7 +47,7 @@ VARIANTS: Dict[str, Variant] = {v.name: v for v in [
                    "carries int8 signs (4x fewer bytes on the z-sized "
                    "tensor); predict a further ~20ms collective cut.",
         inner_dp=True,
-        fed_patch={"compress_signs": True}),
+        fed_patch={"sign_message": "int8"}),
     Variant(
         name="inner_dp+signs8+k4",
         hypothesis="consensus every K=4 rounds (DiLoCo-style local steps) "
@@ -57,14 +57,14 @@ VARIANTS: Dict[str, Variant] = {v.name: v for v in [
                    "emitted); superseded by the structural off-round "
                    "program below.",
         inner_dp=True,
-        fed_patch={"compress_signs": True, "local_steps": 4}),
+        fed_patch={"sign_message": "int8", "local_steps": 4}),
     Variant(
         name="inner_dp+offround",
         hypothesis="the structurally consensus-free off-round program: no "
                    "sign all-reduce at all; with K=4 the amortized "
                    "collective is (1*consensus + 3*offround)/4.",
         inner_dp=True,
-        fed_patch={"compress_signs": True, "local_steps": 0}),
+        fed_patch={"sign_message": "int8", "local_steps": 0}),
     Variant(
         name="inner_dp+signs8+noremat",
         hypothesis="with inner-DP the temp footprint fell to 1.4 GB, so "
@@ -73,7 +73,7 @@ VARIANTS: Dict[str, Variant] = {v.name: v for v in [
                    "~+7 GB temp.",
         inner_dp=True,
         cfg_patch={"remat": False},
-        fed_patch={"compress_signs": True}),
+        fed_patch={"sign_message": "int8"}),
     # --- pair B: granite-moe x train_4k (most collective-bound) ---
     Variant(
         name="einsum_moe",
@@ -97,7 +97,7 @@ VARIANTS: Dict[str, Variant] = {v.name: v for v in [
         name="einsum_moe+signs8",
         hypothesis="einsum MoE + int8 sign consensus.",
         cfg_patch={"moe_impl": "einsum"},
-        fed_patch={"compress_signs": True}),
+        fed_patch={"sign_message": "int8"}),
     # --- pair C: phi3-medium x prefill_32k (worst useful ratio) ---
     Variant(
         name="seqpar16",

@@ -220,13 +220,100 @@ def test_staleness_decay_variants_converge(decay):
     assert float(m["staleness_weight_mean"]) <= 1.0 + 1e-6
 
 
-def test_compress_signs_excludes_decay():
-    """The int8 sign collective is unweighted — requesting it together with
-    a staleness decay is a config conflict, not a silent fallback."""
-    fed = FedConfig(n_clients=4, compress_signs=True, staleness_decay="poly")
+def test_sign_message_int8_composes_with_decay_and_compensation():
+    """PR-4 lifts the old 'compress_signs requires constant decay'
+    restriction: the int8 wire format carries the *weighted* message
+    (payload = sign, per-client f32 scale = s(d)), so decay, Taylor
+    compensation, and compression compose — and losslessly: the int8
+    trajectory equals the f32 trajectory bit-for-bit."""
+    outs = {}
+    for msg in ("f32", "int8"):
+        fed = FedConfig(n_clients=6, active_frac=0.5, staleness_decay="poly",
+                        staleness_compensation="taylor", sign_message=msg)
+        state, batch, step, key = make_problem(fed)
+        rng = np.random.RandomState(5)
+        for t in range(6):
+            mask = jnp.asarray(rng.rand(6) < 0.5)
+            state, m = step(state, batch, jax.random.fold_in(key, t),
+                            act=mask)
+        outs[msg] = np.concatenate([np.asarray(l).ravel()
+                                    for l in jax.tree.leaves(state.z)])
+        assert np.isfinite(outs[msg]).all()
+    np.testing.assert_array_equal(outs["f32"], outs["int8"])
+
+
+def test_compress_signs_alias_resolves_to_int8():
+    """The deprecated compress_signs flag is a shim for sign_message='int8'
+    and produces the identical round."""
+    assert FedConfig(compress_signs=True).resolved_sign_message == "int8"
+    assert FedConfig().resolved_sign_message == "f32"
+    outs = {}
+    for name, kw in (("alias", dict(compress_signs=True)),
+                     ("knob", dict(sign_message="int8"))):
+        fed = FedConfig(n_clients=5, active_frac=1.0, **kw)
+        state, batch, step, key = make_problem(fed)
+        state, _ = step(state, batch, key)
+        outs[name] = np.concatenate([np.asarray(l).ravel()
+                                     for l in jax.tree.leaves(state.z)])
+    np.testing.assert_array_equal(outs["alias"], outs["knob"])
+
+
+def test_sign_message_validation():
+    fed = FedConfig(n_clients=4, sign_message="int4")
     state, batch, step, key = make_problem(fed)
-    with pytest.raises(ValueError, match="compress_signs"):
+    with pytest.raises(ValueError, match="sign_message"):
         step(state, batch, key)
+
+
+# ---------------- FedBuff server-side LR normalization ----------------------
+def test_fedbuff_lr_norm_scales_consensus_step():
+    """With the knob on, the z step shrinks by exactly K/C relative to the
+    unnormalized round (same dz, scaled AXPY)."""
+    act = jnp.asarray([True, True, True, False, False, False])
+    fed_n = FedConfig(n_clients=6, active_frac=0.5, fedbuff_lr_norm=True)
+    fed_0 = FedConfig(n_clients=6, active_frac=0.5)
+    state, batch, step_n, key = make_problem(fed_n)
+    _, _, step_0, _ = make_problem(fed_0)
+    out_n, _ = step_n(state, batch, key, act=act)
+    out_0, _ = step_0(state, batch, key, act=act)
+    for z0, zn, zp in zip(jax.tree.leaves(state.z),
+                          jax.tree.leaves(out_n.z),
+                          jax.tree.leaves(out_0.z)):
+        np.testing.assert_allclose(
+            np.asarray(zn) - np.asarray(z0),
+            0.5 * (np.asarray(zp) - np.asarray(z0)),   # K/C = 3/6
+            rtol=1e-5, atol=1e-7)
+
+
+def test_fedbuff_lr_norm_arrivals_default_matches_quorum_path():
+    """arrivals=None falls back to the distinct active count sum(act) — so
+    feeding the explicit K of a duplicate-free (quorum, K = S) round is
+    bit-identical to the derived path."""
+    fed = FedConfig(n_clients=6, active_frac=0.5, fedbuff_lr_norm=True)
+    state, batch, step, key = make_problem(fed)
+    act = jnp.asarray([True, False, True, False, True, False])
+    out_a, m_a = step(state, batch, key, act=act)
+    out_b, m_b = step(state, batch, key, act=act, arrivals=np.int32(3))
+    for a, b in zip(jax.tree.leaves(out_a), jax.tree.leaves(out_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a FedBuff buffer with duplicate deliveries (K > S) steps further
+    out_c, _ = step(state, batch, key, act=act, arrivals=np.int32(5))
+    z_a = np.asarray(jax.tree.leaves(out_a.z)[0])
+    z_c = np.asarray(jax.tree.leaves(out_c.z)[0])
+    z_0 = np.asarray(jax.tree.leaves(state.z)[0])
+    np.testing.assert_allclose(z_c - z_0, (5.0 / 3.0) * (z_a - z_0),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_fedbuff_lr_norm_off_ignores_arrivals():
+    """Default off = bit-compat: the arrivals kwarg must not leak into the
+    unnormalized round."""
+    fed = FedConfig(n_clients=4, active_frac=1.0)
+    state, batch, step, key = make_problem(fed)
+    out_a, _ = step(state, batch, key)
+    out_b, _ = step(state, batch, key, arrivals=np.int32(2))
+    for a, b in zip(jax.tree.leaves(out_a), jax.tree.leaves(out_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_dual_step_damped_by_absence():

@@ -68,6 +68,33 @@ def test_fedbuff_benchmark_smoke():
     assert np.isfinite(meta["quorum"]).all()
 
 
+def test_fedbuff_lr_norm_autofeeds_arrivals():
+    """train_bafdp couples FedConfig.fedbuff_lr_norm to the schedule's
+    realized per-round K automatically: on a schedule where a fast client
+    delivered twice into one buffer (K > distinct actives), the default
+    run must differ from one forced onto the sum(act) fallback — if the
+    two match, the knob silently undercounted K."""
+    import jax
+    from benchmarks.common import train_bafdp
+    from repro.configs import FedConfig
+    from repro.core.async_engine import DelayModel
+    from repro.core.schedule import FedBuffTrigger, build_schedule
+    rounds = 4
+    sched = build_schedule(rounds, DelayModel(n_clients=8, hetero=2.5,
+                                              seed=3),
+                           FedBuffTrigger(buffer_k=5))
+    assert (sched.arrivals > sched.quorum).any()   # duplicates present
+    fed = FedConfig(n_clients=8, fedbuff_lr_norm=True)
+    st_auto, _, _ = train_bafdp("milano", 1, fed, rounds, schedule=sched)
+    st_fallback, _, _ = train_bafdp("milano", 1, fed, rounds,
+                                    schedule=sched, feed_arrivals=False)
+    z_a = np.concatenate([np.asarray(l).ravel()
+                          for l in jax.tree.leaves(st_auto.z)])
+    z_f = np.concatenate([np.asarray(l).ravel()
+                          for l in jax.tree.leaves(st_fallback.z)])
+    assert not np.array_equal(z_a, z_f)
+
+
 def test_million_client_schedule_smoke():
     """Tier-1 acceptance smoke (also wired into CI by name): the sparse
     streaming build handles a million-client fleet without ever allocating

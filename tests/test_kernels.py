@@ -151,6 +151,103 @@ def test_ssm_scan(S, D, N, chunk, bd):
                                rtol=1e-5, atol=1e-5)
 
 
+# ---------------- unified consensus-path dispatch ---------------------------
+def _consensus_problem(D=1500, C=12, seed=0):
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.normal(key, (D,))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (C, D))
+    phi = jax.random.normal(jax.random.fold_in(key, 2), (D,)) * 0.01
+    return z, W, phi
+
+
+@pytest.mark.parametrize("decay", ["constant", "hinge", "poly"])
+@pytest.mark.parametrize("message", ["f32", "int8"])
+def test_sign_consensus_dispatch_parity(decay, message):
+    """Fused (interpret) vs XLA vs the ref oracles, for every
+    staleness_decay mode and both wire formats: one dispatch, one result.
+    The int8 wire format is lossless for sign messages, so the only
+    tolerance is ulp-level program-structure noise (XLA lowers ``mean``
+    vs ``sum / C`` differently across separately-jitted programs), NOT a
+    quantization budget."""
+    from repro.configs import FedConfig
+    from repro.core.bafdp import staleness_weights
+
+    z, W, phi = _consensus_problem()
+    C = W.shape[0]
+    stale = jnp.arange(C, dtype=jnp.float32)
+    weights = None if decay == "constant" else staleness_weights(
+        stale, FedConfig(staleness_decay=decay))
+    want = np.asarray(
+        ref.sign_agg_weighted_ref(
+            z, W, phi,
+            jnp.ones((C,)) if weights is None else weights, 0.005, 0.01))
+    for impl in ("xla", "interpret"):
+        got = ops.sign_consensus(z, W, phi, weights, 0.005, 0.01,
+                                 message=message, impl=impl)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=0, atol=1e-6,
+                                   err_msg=f"{decay}/{message}/{impl}")
+    # within one impl the int8 path must match the f32 path bit-for-bit:
+    # dequantized messages ARE the f32 messages, same reduction structure
+    np.testing.assert_array_equal(
+        np.asarray(ops.sign_consensus(z, W, phi, weights, 0.005, 0.01,
+                                      message="int8", impl="interpret")),
+        np.asarray(ops.sign_consensus(z, W, phi, weights, 0.005, 0.01,
+                                      message="int8", impl="xla")))
+
+
+def test_sign_consensus_rejects_unknown_message():
+    z, W, phi = _consensus_problem(D=128, C=4)
+    with pytest.raises(ValueError, match="sign message"):
+        ops.sign_consensus(z, W, phi, None, 0.005, 0.01, message="int4")
+
+
+def test_int8_wire_format_round_trips_losslessly():
+    """encode -> decode reproduces the f32 message bit-for-bit: the payload
+    is the sign (exact in int8), the per-client f32 scale is the staleness
+    weight."""
+    from repro.distributed import collectives
+
+    z, W, _ = _consensus_problem(D=700, C=9, seed=3)
+    sw = jax.random.uniform(jax.random.PRNGKey(5), (9,), minval=0.05,
+                            maxval=1.0)
+    msg = collectives.encode_sign_message(z, W, sw)
+    assert msg.payload.dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(collectives.decode_sign_message(msg)),
+        np.asarray(jnp.sign(z[None] - W) * sw[:, None]))
+    # wire accounting: 1 byte/coordinate + 4 bytes/client (weighted only —
+    # the unweighted message carries no scale column)
+    assert collectives.message_bytes(9, 700, "int8") == (9 * 700, 36)
+    assert collectives.message_bytes(9, 700, "int8", weighted=False) \
+        == (9 * 700, 0)
+    assert collectives.message_bytes(9, 700, "f32") == (9 * 700 * 4, 0)
+
+
+def test_int8_sign_sum_accumulates_past_c128():
+    """The overflow regression (C=200): every client on the same side of z
+    drives |sum_i sign_i| = C past the int8 range.  The wire-format reduce
+    accumulates in int32 and matches the f32 oracle exactly; the pre-fix
+    int8-dtype accumulator provably wraps on the same input."""
+    from repro.distributed import collectives
+
+    C, D = 200, 600
+    z = jax.random.normal(jax.random.PRNGKey(1), (D,))
+    W = jnp.tile((z - 1000.0)[None], (C, 1))      # sign(z - w_i) = +1 all
+    phi = jnp.zeros((D,))
+    for impl in ("xla", "interpret"):
+        got = ops.sign_consensus(z, W, phi, None, 0.005, 0.01,
+                                 message="int8", impl=impl)
+        np.testing.assert_array_equal(
+            np.asarray(got),
+            np.asarray(ref.sign_agg_ref(z, W, phi, 0.005, 0.01)), impl)
+    msg = collectives.encode_sign_message(z, W)
+    np.testing.assert_array_equal(
+        np.asarray(collectives.sign_sum(msg, C)), np.full(D, 1.0))
+    # the old accumulator (dtype=int8) wraps 200 -> -56 on this exact input
+    wrapped = jnp.sum(msg.payload, axis=0, dtype=jnp.int8)
+    assert int(wrapped[0]) == 200 - 256, "C=200 no longer overflows int8?"
+
+
 def test_sign_agg_bounded_influence():
     """The RSA property: one client's arbitrary corruption moves the update
     by at most psi*alpha/C per coordinate."""

@@ -100,6 +100,34 @@ def test_rsa_sign_bounded_under_attack(attack):
     assert gap <= B + 1e-6, f"rsa_sign under {attack}: gap {gap}"
 
 
+@pytest.mark.parametrize("attack", byz.ATTACKS)
+def test_int8_weighted_consensus_bounded_under_attack(attack):
+    """The quantized wire format keeps RSA's bounded influence: through the
+    unified dispatch with staleness weights s_i and sign_message='int8', the
+    B corrupted clients move each coordinate of the consensus update by at
+    most alpha_z * psi * 2 * sum_{i in B} s_i / C — the same envelope as
+    the f32 path (the int8 message is lossless, so nothing widens)."""
+    from repro.kernels import ops
+
+    psi, alpha_z = 0.01, 0.1
+    z = flat(SERVER)
+    D = z.shape[0]
+    W_full = jnp.stack([flat(jax.tree.map(lambda l: l[i], corrupted(attack)))
+                        for i in range(C)])
+    W_honest = jnp.stack([flat(jax.tree.map(lambda l: l[i], HONEST))
+                          for i in range(C)])
+    sw = jnp.linspace(0.2, 1.0, C)
+    phi = jnp.zeros((D,))
+    got = ops.sign_consensus(z, W_full, phi, sw, psi, alpha_z,
+                             message="int8", impl="interpret")
+    base = ops.sign_consensus(z, W_honest, phi, sw, psi, alpha_z,
+                              message="int8", impl="interpret")
+    byz_weight = float(jnp.sum(sw * jnp.asarray(MASK)))
+    gap = float(jnp.max(jnp.abs(got - base)))
+    assert gap <= alpha_z * psi * 2.0 * byz_weight / C + 1e-6, \
+        f"int8-weighted under {attack}: gap {gap}"
+
+
 @pytest.mark.parametrize("attack", ["scaled", "gaussian"])
 def test_fedavg_breaks(attack):
     """The linear mean has unbounded sensitivity: magnitude attacks drag it

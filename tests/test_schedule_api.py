@@ -164,6 +164,43 @@ def test_fedbuff_staleness_matches_definition2():
             sim.staleness[r][skipped], sim.staleness[r - 1][skipped] + 1)
 
 
+def test_fedbuff_duplicate_deliveries_carry_per_arrival_ages():
+    """Ages are stamped at the *arrival* event, not the drain round: a fast
+    client delivering twice into one buffer carries its absence length on
+    the first delivery and age 0 on the repeat (the repeat was computed
+    after the first delivery, not before the round).  The pre-fix code
+    stamped both at drain and gave them the same stale age."""
+    sched = fedbuff_sched(k=5, rounds=50, hetero=2.5)
+    saw_split = False
+    for r in range(sched.n_rounds):
+        w = sched.round_winners(r)
+        ages = sched.winner_ages[sched.offsets[r]:sched.offsets[r + 1]]
+        _, first = np.unique(w, return_index=True)
+        repeat = np.ones(w.size, bool)
+        repeat[first] = False
+        # every repeat delivery within one buffer is fresh by construction
+        np.testing.assert_array_equal(ages[repeat], 0, err_msg=str(r))
+        for j in np.flatnonzero(repeat):
+            k0 = int(np.flatnonzero(w == w[j])[0])
+            if ages[k0] > 0:
+                saw_split = True          # the two deliveries really differ
+    assert saw_split, "scenario produced no duplicate with a stale first leg"
+
+
+def test_quorum_winner_ages_unchanged_by_arrival_stamping():
+    """Duplicate-free triggers never hit the per-arrival branch: ages still
+    equal r - last_participation for every winner."""
+    sched = build_schedule(
+        30, DelayModel(n_clients=8, hetero=1.5, seed=4),
+        QuorumTrigger(active_frac=0.4))
+    last = np.zeros(8, np.int64)
+    for r in range(30):
+        w = sched.round_winners(r)
+        ages = sched.winner_ages[sched.offsets[r]:sched.offsets[r + 1]]
+        np.testing.assert_array_equal(ages, r - last[w])
+        last[w] = r
+
+
 def test_fedbuff_times_nondecreasing_and_causal():
     sched = fedbuff_sched(k=4, rounds=40)
     assert (np.diff(sched.times) >= 0).all()
@@ -328,6 +365,32 @@ def test_federated_run_matches_manual_loop():
     import jax as _jax
     for a, b in zip(_jax.tree.leaves(state_m), _jax.tree.leaves(state_r)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_federated_run_feed_arrivals():
+    """feed_arrivals=True hands each round its admitted-update count (the
+    realized FedBuff K, duplicates included) — the input fedbuff_lr_norm
+    normalizes the consensus step with."""
+    import jax
+
+    def step(state, batch, key, act=None, stale=None, arrivals=None):
+        state = state + [int(arrivals)]
+        return state, {"loss": 0.0}
+
+    sched = fedbuff_sched(k=5, rounds=8, hetero=2.5)
+    run = FederatedRun(step=step, rounds=8, schedule=sched,
+                       feed_arrivals=True)
+    log, _ = run.run([], lambda t: None, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(log, sched.arrivals)
+    assert (sched.arrivals == 5).all()
+    # without the flag the kwarg is withheld (baseline round functions)
+    run = FederatedRun(step=_toy_step, rounds=8, schedule=sched)
+    log, _ = run.run([], lambda t: None, jax.random.PRNGKey(0))
+    assert len(log) == 8
+    # no schedule -> no arrivals counts to feed: loud error, not a no-op
+    run = FederatedRun(step=step, rounds=8, feed_arrivals=True)
+    with pytest.raises(ValueError, match="feed_arrivals"):
+        run.run([], lambda t: None, jax.random.PRNGKey(0))
 
 
 def test_federated_run_rejects_short_schedule():

@@ -90,20 +90,43 @@ def _round_fn(fed, key):
 
 
 def test_int8_signs_lossless_sum():
-    """compress_signs must not change the consensus trajectory: the int8
-    sign SUM is exact (|sum| <= C < 128); only the final mean division may
-    differ by one ulp (sum/C vs sum*(1/C))."""
+    """sign_message='int8' (and its deprecated compress_signs alias) must
+    not change the consensus trajectory: a sign message quantizes to int8
+    exactly, and the reduction accumulates outside the wire dtype."""
     key = jax.random.PRNGKey(3)
     outs = []
-    for compress in (False, True):
-        fed = FedConfig(n_clients=6, active_frac=1.0, attack="none",
-                        compress_signs=compress)
+    for kw in ({}, {"sign_message": "int8"}, {"compress_signs": True}):
+        fed = FedConfig(n_clients=6, active_frac=1.0, attack="none", **kw)
         state, step, batch = _round_fn(fed, key)
         for t in range(5):
             state, _ = step(state, batch, jax.random.fold_in(key, t))
         outs.append(np.concatenate([np.asarray(l).ravel()
                                     for l in jax.tree.leaves(state.z)]))
     np.testing.assert_allclose(outs[0], outs[1], rtol=0, atol=1e-6)
+    np.testing.assert_array_equal(outs[1], outs[2])
+
+
+def test_int8_signs_c200_overflow_regression():
+    """C=200 >= 128: every client's params sit far below z, so the sign
+    sum hits +200 on every coordinate — the pre-PR-4 int8-dtype accumulator
+    wrapped it to -56 and pulled the consensus the WRONG way.  The int8
+    trajectory must now equal the f32 trajectory exactly (this test fails
+    on the old `jnp.sum(..., dtype=jnp.int8)` path)."""
+    key = jax.random.PRNGKey(9)
+    outs = []
+    for msg in ("f32", "int8"):
+        fed = FedConfig(n_clients=200, active_frac=1.0, attack="none",
+                        sign_message=msg)
+        state, step, batch = _round_fn(fed, key)
+        # park every client well below the consensus: sign(z - w_i) = +1
+        # everywhere, and one local step cannot close a 1e3 gap
+        state = state._replace(W=jax.tree.map(
+            lambda l: (l.astype(jnp.float32) - 1e3).astype(l.dtype),
+            state.W))
+        state, _ = step(state, batch, key)
+        outs.append(np.concatenate([np.asarray(l).ravel()
+                                    for l in jax.tree.leaves(state.z)]))
+    np.testing.assert_array_equal(outs[0], outs[1])
 
 
 def test_offround_freezes_consensus():
@@ -130,4 +153,5 @@ def test_variants_registry_applies():
     assert kw == {"inner_dp": False}
     v = VARIANTS["inner_dp+signs8"]
     cfg3, fed3, kw = v.apply(ARCHS["smollm-360m"])
-    assert kw == {"inner_dp": True} and fed3.compress_signs
+    assert kw == {"inner_dp": True}
+    assert fed3.resolved_sign_message == "int8"
