@@ -138,7 +138,8 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
                 staleness: Optional[np.ndarray] = None,
                 collect: Tuple[str, ...] = (),
                 optimizer: str = "adam",
-                feed_arrivals: Optional[bool] = None):
+                feed_arrivals: Optional[bool] = None,
+                round_impl: str = "dense"):
     """Returns (state, cfg, history dict).
 
     ``schedule`` (a sparse :class:`repro.core.schedule.Schedule`, e.g.
@@ -151,10 +152,24 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
     ``feed_arrivals`` (per-round admitted-update counts as ``arrivals=``)
     defaults to on exactly when ``fed.fedbuff_lr_norm`` needs them.
 
+    ``round_impl="sparse"`` trains through the active-subset round path
+    (``bafdp.bafdp_round_sparse`` fed ``Schedule.padded_rows``): O(S)
+    per-round compute/memory over the per-client leaves, and per-delivery
+    *admission* ages as the staleness input.  Needs a ``schedule=``;
+    ``fed.consensus_scope`` is promoted to ``"active"`` automatically
+    (the sparse path cannot consume inactive clients' frozen messages).
+
     Experimental setting per the paper Sec. V-D: Adam on the data/DRO
     gradient; grid-searched DRO scale (see FedConfig.dro_weight)."""
     fed = dataclasses.replace(fed, omega_optimizer=optimizer,
                               dro_weight=0.01)
+    if round_impl not in ("dense", "sparse"):
+        raise ValueError(f"unknown round_impl: {round_impl!r}")
+    if round_impl == "sparse":
+        if schedule is None:
+            raise ValueError("round_impl='sparse' needs a schedule=")
+        if fed.consensus_scope != "active":
+            fed = dataclasses.replace(fed, consensus_scope="active")
     cfg = forecast_cfg("mlp", horizon)
     train, test, scalers = problem(dataset, horizon, fed.n_clients, seed)
     key = jax.random.PRNGKey(seed)
@@ -165,8 +180,10 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
         return mse_loss(p, perturb_inputs(k, x, eps, input_sigma), y, cfg)
 
     state = init_fed_state(key, lambda k: init_forecaster(k, cfg), fed)
+    round_fn = bafdp.bafdp_round_sparse if round_impl == "sparse" \
+        else bafdp.bafdp_round
     step = jax.jit(functools.partial(
-        bafdp.bafdp_round, local_loss=local_loss, fed=fed, c3=c3,
+        round_fn, local_loss=local_loss, fed=fed, c3=c3,
         n_samples=train["x"].shape[1], d_dim=cfg.d_x + cfg.d_y,
         byz_mask=byz_mask(fed.n_clients, fed.n_byzantine)))
     rng = np.random.RandomState(seed)
@@ -177,12 +194,15 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
 
     # fedbuff_lr_norm needs the schedule's realized per-round K: feed it
     # whenever the knob is on (a sum(act) fallback would undercount rounds
-    # where a fast client delivered twice into one buffer)
+    # where a fast client delivered twice into one buffer).  The sparse
+    # rows carry K natively (sum of the weight row counts duplicates), so
+    # the explicit arrivals feed is redundant there — but harmless.
     if feed_arrivals is None:
         feed_arrivals = fed.fedbuff_lr_norm and schedule is not None
     run = FederatedRun(
         step=step, rounds=rounds, schedule=schedule,
         n_clients=fed.n_clients, feed_arrivals=feed_arrivals,
+        round_impl=round_impl,
         round_kwargs=_legacy_round_kwargs(schedule, active_masks, staleness,
                                           rounds, fed.n_clients))
     state, hist = run.run(

@@ -69,6 +69,34 @@ def main(rounds: int = 0, quick: bool = False) -> List[str]:
                 f"wire_ratio={wire_f32 / wire_i8:.2f};"
                 f"tpu_speedup_vs_f32={bytes_f32 / bytes_i8:.2f}")
 
+    # active-subset round path: per-round the sparse server touches S
+    # gathered rows of each (C, D) per-client leaf instead of all C — the
+    # dominant compute/bytes term drops by C/S.  Timed here on the
+    # consensus reduction (the round's only cross-client op); the derived
+    # column carries the per-round byte accounting for the whole leaf set.
+    Cs, Ss, Ds = (4096, 64, 4096) if not quick else (512, 16, 512)
+    Wc = jax.random.normal(key, (Cs, Ds))
+    zc = jax.random.normal(key, (Ds,))
+    phic = jnp.zeros((Ds,))
+    w_mask = (jnp.arange(Cs) < Ss).astype(jnp.float32)
+    f_dense = jax.jit(lambda z, W, p, w: ref.sign_agg_fold_ref(
+        z, W, p, w, 0.01, 0.01, Cs))
+    us_dense = _time(f_dense, zc, Wc, phic, w_mask)
+    gidx = jnp.arange(Ss)
+    f_sparse = jax.jit(lambda z, W, p: ref.sign_agg_fold_ref(
+        z, W[gidx], p, jnp.ones((Ss,)), 0.01, 0.01, Cs))
+    us_sparse = _time(f_sparse, zc, Wc, phic)
+    bytes_dense = Cs * Ds * 4
+    bytes_sparse = Ss * Ds * 4
+    tpu_dense_us = (Cs + 2) * Ds * 4 / V5E.hbm_bw * 1e6
+    tpu_sparse_us = (Ss + 2) * Ds * 4 / V5E.hbm_bw * 1e6
+    rows.append(f"kernel/sparse_round_consensus_C{Cs}_S{Ss}_D{Ds},"
+                f"{us_sparse:.1f},dense_us={us_dense:.1f};"
+                f"bytes_dense={bytes_dense};bytes_sparse={bytes_sparse};"
+                f"byte_ratio={bytes_dense / bytes_sparse:.0f};"
+                f"tpu_roofline_us_dense={tpu_dense_us:.2f};"
+                f"tpu_roofline_us_sparse={tpu_sparse_us:.3f}")
+
     # flash attention fwd
     B, S, H, Dh = (2, 1024, 8, 64) if not quick else (1, 256, 4, 64)
     q = jax.random.normal(key, (B, S, H, Dh))

@@ -241,6 +241,21 @@ class FedConfig:
     compensation_beta: float = 0.9         # EWMA rate of the momentum proxy
     compensation_scale: float = 1.0        # scale on the Taylor term
     compensation_clip: float = 10.0        # max extrapolated rounds
+    # which client messages the Eq. (20) server update consumes:
+    #   all:    the server keeps every client's last-received w_i and the
+    #           sign sum runs over all C of them (stale frozen params
+    #           included) — the seed semantics, O(C) per round.
+    #   active: the server consumes ONLY the S messages delivered this
+    #           round (Eq. 20's asynchronous reading); inactive clients
+    #           contribute nothing.  This is the only scope implementable
+    #           in O(S) per-round compute, and the scope bafdp_round_sparse
+    #           requires.  The dense round supports both and is the
+    #           bit-compat oracle for the sparse path: under "active" its
+    #           consensus reduction runs as an order-canonical left-fold
+    #           over client ids (zero-weight rows are exact no-ops), so a
+    #           masked dense round and the gathered sparse round agree
+    #           bit-for-bit on duplicate-free schedules.
+    consensus_scope: str = "all"   # all | active
     # FedBuff server-side learning-rate normalization (arXiv:2106.06639
     # Sec. 3): a K-arrivals buffered round carries K fresh updates out of C
     # clients, so the consensus (z) step is scaled by K/C — K is the

@@ -33,6 +33,14 @@ Beyond-paper options (recorded separately in EXPERIMENTS.md Section Perf):
 ``local_steps`` K>1 (consensus every K rounds), ``sign_message="int8"``
 (1 byte/coordinate consensus collective), and ``fedbuff_lr_norm`` (scale
 the consensus step of a K-arrivals buffered round by K/C).
+
+Scale: :func:`bafdp_round_sparse` is the **active-subset round path** —
+the same round in O(S) per-round compute/memory over the per-client
+leaves (gather the S winner rows, update, scatter back), for S-of-many
+fleets where O(C) per round is the wall (C=1M smoke in CI).  It requires
+``FedConfig.consensus_scope="active"``; the dense round under that scope
+runs the same code path over the full-width masked block and is the
+bit-compat oracle (``tests/test_sparse_round.py``).
 """
 from __future__ import annotations
 
@@ -46,9 +54,11 @@ import jax.numpy as jnp
 from repro.configs.base import FedConfig
 from repro.core import byzantine as byz_lib
 from repro.core import dro
-from repro.core.fed_state import FedState, consensus_gap
+from repro.core.fed_state import (FedState, consensus_gap, gather_clients,
+                                  scatter_clients)
 from repro.core.privacy import eps_feasible, sigma_for_eps
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 # local_loss(params_i, batch_i, key_i, eps_i) -> scalar
 LocalLoss = Callable[[Any, Any, jnp.ndarray, jnp.ndarray], jnp.ndarray]
@@ -150,6 +160,113 @@ def _per_client_objective(local_loss: LocalLoss, fed: FedConfig, c3: float,
     return obj
 
 
+def _client_block_updates(W, z_local, phi, eps, lam, opt, comp, batch,
+                          noise_keys, cnt_inc, *, local_loss: LocalLoss,
+                          fed: FedConfig, c3: float, n_samples: int,
+                          d_dim: int, taylor: bool):
+    """Steps 1 + 3-prep of Algorithm 1 over a stacked client block:
+    per-client grads, DP-perturbed loss, optional Adam preconditioning,
+    the Taylor-compensation EWMA proposal, and the Eq. (19) eps proposal.
+
+    Every computation here is row-independent, so the leading axis may be
+    the full fleet (C — the ``consensus_scope="all"`` dense round, which
+    masks inactive rows afterwards; also the full-width masked block the
+    ``"active"``-scope round runs) or a gathered active-subset block
+    (S_max — the sparse round, which scatters the rows back): the same
+    client's row produces bit-identical proposals either way, which is
+    the dense<->sparse equivalence contract.  ``cnt_inc`` is the Adam
+    step-count increment per row (the activity mask for the dense round,
+    all-ones for a gathered block whose every row is active).
+
+    Returns ``(W_prop, new_opt, comp_prop, eps_prop, loss_i, g_i, G_i,
+    full_grad)`` — proposals for EVERY row, unmasked.
+    """
+    obj = _per_client_objective(local_loss, fed, c3, n_samples, d_dim)
+
+    def client_grads(w_i, b_i, nk, eps_i):
+        (loss, (g, G)), grads = jax.value_and_grad(obj, has_aux=True)(
+            w_i, b_i, nk, eps_i)
+        return grads, loss, g, G
+
+    # grads of the smooth local objective g + rho*G; the Lagrangian terms
+    # d/dw [phi_i (z - w_i)] = -phi_i and the L1 subgradient are exact and
+    # added OUTSIDE the (optional) Adam preconditioner — normalizing the
+    # constant-magnitude psi*sign term by sqrt(v) makes it dominate near
+    # convergence (measured: +40 RMSE on Table I).
+    grads, loss_i, g_i, G_i = jax.vmap(client_grads)(
+        W, batch, noise_keys, eps)
+
+    R = eps.shape[0]
+    if fed.grad_clip:
+        # per-client global-norm clip (LM-scale stability; the paper's MLP
+        # doesn't need it, billion-parameter exp-gated archs do)
+        sq = jnp.zeros((R,), jnp.float32)
+        for g in jax.tree.leaves(grads):
+            sq = sq + jnp.sum(jnp.square(g.astype(jnp.float32)),
+                              axis=tuple(range(1, g.ndim)))
+        scale = jnp.minimum(1.0, fed.grad_clip
+                            / jnp.maximum(jnp.sqrt(sq), 1e-9))
+
+        def clip(g):
+            return g * scale.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+
+        grads = jax.tree.map(clip, grads)
+
+    # Lagrangian pieces of Eq. 18:  -phi_i + psi * sign(w_i - z_local_i)
+    def lag_term(w, zl, phi_l):
+        s = jnp.sign(w.astype(jnp.float32) - zl.astype(jnp.float32))
+        return fed.psi * s - phi_l.astype(jnp.float32)
+
+    lag_grad = jax.tree.map(lag_term, W, z_local, phi)
+    full_grad = jax.tree.map(lambda a, b: a.astype(jnp.float32) + b,
+                             grads, lag_grad)
+
+    # omega step: plain SGD (faithful Eq. 18) or Adam (paper's Section V-D)
+    new_opt = opt
+    if fed.omega_optimizer == "adam" and opt is not None:
+        cnt = opt["count"] + cnt_inc.astype(jnp.int32)
+        b1, b2 = fed.adam_b1, fed.adam_b2
+
+        def upd_m(m, g):
+            return b1 * m + (1 - b1) * g.astype(jnp.float32)
+
+        def upd_v(v, g):
+            return b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32))
+
+        m = jax.tree.map(upd_m, opt["m"], grads)
+        v = jax.tree.map(upd_v, opt["v"], grads)
+        bc1 = 1 - b1 ** jnp.maximum(cnt, 1).astype(jnp.float32)
+        bc2 = 1 - b2 ** jnp.maximum(cnt, 1).astype(jnp.float32)
+
+        def adam_step(w, m_l, v_l, lg):
+            r1 = bc1.reshape((-1,) + (1,) * (w.ndim - 1))
+            r2 = bc2.reshape((-1,) + (1,) * (w.ndim - 1))
+            upd = (m_l / r1) / (jnp.sqrt(v_l / r2) + fed.adam_eps)
+            # consensus terms stay linear (un-preconditioned)
+            return w.astype(jnp.float32) - fed.alpha_w * (upd + lg)
+
+        W_prop = jax.tree.map(adam_step, W, m, v, lag_grad)
+        new_opt = {"m": m, "v": v, "count": cnt}
+    else:
+        W_prop = jax.tree.map(
+            lambda w, g: w.astype(jnp.float32) - fed.alpha_w * g,
+            W, full_grad)
+
+    # momentum proxy for Taylor staleness compensation (EWMA proposal)
+    comp_prop = None
+    if taylor:
+        cb = fed.compensation_beta
+        comp_prop = jax.tree.map(lambda c, g: cb * c + (1.0 - cb) * g,
+                                 comp, full_grad)
+
+    # eps update (Eq. 19):  d/deps [ (eta + c3/eps) G ] = -c3 G / eps^2
+    d_eps = -fed.dro_weight * c3 * G_i \
+        / jnp.square(jnp.maximum(eps, fed.eps_min)) + lam
+    eps_prop = eps_feasible(eps - fed.alpha_eps * d_eps, fed)
+
+    return W_prop, new_opt, comp_prop, eps_prop, loss_i, g_i, G_i, full_grad
+
+
 def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
                 fed: FedConfig, c3: float, n_samples: int, d_dim: int,
                 byz_mask: jnp.ndarray, act: Any = None,
@@ -175,11 +292,22 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     ``fed.fedbuff_lr_norm`` scales the consensus step by K/C; ``None``
     falls back to the distinct active count ``sum(act)``, which equals K
     whenever no client delivered twice (the quorum server).
+
+    ``fed.consensus_scope`` selects what the Eq. (20) server consumes:
+    ``"all"`` (default, seed bit-compat) sums every client's last
+    message; ``"active"`` consumes only this round's delivered messages
+    and runs as :func:`bafdp_round_sparse` over the full-width masked
+    block — the bit-compat oracle of the O(S) gathered path (metrics
+    then follow the sparse round's block semantics).
     """
     sign_message = fed.resolved_sign_message      # validates the knob
     if fed.staleness_compensation not in ("none", "taylor"):
         raise ValueError(
             f"unknown staleness_compensation: {fed.staleness_compensation!r}")
+    if fed.consensus_scope not in ("all", "active"):
+        raise ValueError(
+            f"unknown consensus_scope: {fed.consensus_scope!r} "
+            "(expected 'all' or 'active')")
     taylor = fed.staleness_compensation == "taylor"
     if taylor and state.comp is None:
         raise ValueError(
@@ -201,6 +329,22 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
                 f"unknown internal_select: {fed.internal_select!r}")
     else:
         act = jnp.asarray(act).astype(bool)
+
+    if fed.consensus_scope == "active":
+        # the "dense masked round" of the active scope IS the sparse round
+        # run over the full-width block: every client is a block row,
+        # weight = the activity mask.  One code path means the O(C) masked
+        # round and the O(S) gathered round cannot drift — the equivalence
+        # suite pins them bit-for-bit.  (An independent dense
+        # implementation of the same reductions is NOT bit-reproducible
+        # on CPU XLA: structurally different programs fuse the per-client
+        # elementwise chains differently and drift ~1 ulp.)
+        return bafdp_round_sparse(
+            state, batch, key, local_loss=local_loss, fed=fed, c3=c3,
+            n_samples=n_samples, d_dim=d_dim, byz_mask=byz_mask,
+            idx=jnp.arange(C, dtype=jnp.int32), stale=stale,
+            weight=act.astype(jnp.float32), arrivals=arrivals)
+
     t = state.t
     tau_new = jnp.where(act, t, state.tau)
     stale_v = (t - tau_new).astype(jnp.float32) if stale is None \
@@ -209,76 +353,12 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     s_w_dual = staleness_weights((t - state.tau).astype(jnp.float32), fed)
 
     # ---------------- Step 1: active clients update (w_i, eps_i) ----------
-    obj = _per_client_objective(local_loss, fed, c3, n_samples, d_dim)
     noise_keys = jax.random.split(k_noise, C)
-
-    def client_grads(w_i, b_i, nk, eps_i):
-        (loss, (g, G)), grads = jax.value_and_grad(obj, has_aux=True)(
-            w_i, b_i, nk, eps_i)
-        return grads, loss, g, G
-
-    # grads of the smooth local objective g + rho*G; the Lagrangian terms
-    # d/dw [phi_i (z - w_i)] = -phi_i and the L1 subgradient are exact and
-    # added OUTSIDE the (optional) Adam preconditioner — normalizing the
-    # constant-magnitude psi*sign term by sqrt(v) makes it dominate near
-    # convergence (measured: +40 RMSE on Table I).
-    grads, loss_i, g_i, G_i = jax.vmap(client_grads)(
-        state.W, batch, noise_keys, state.eps)
-
-    if fed.grad_clip:
-        # per-client global-norm clip (LM-scale stability; the paper's MLP
-        # doesn't need it, billion-parameter exp-gated archs do)
-        sq = jnp.zeros((C,), jnp.float32)
-        for g in jax.tree.leaves(grads):
-            sq = sq + jnp.sum(jnp.square(g.astype(jnp.float32)),
-                              axis=tuple(range(1, g.ndim)))
-        scale = jnp.minimum(1.0, fed.grad_clip
-                            / jnp.maximum(jnp.sqrt(sq), 1e-9))
-
-        def clip(g):
-            return g * scale.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype)
-
-        grads = jax.tree.map(clip, grads)
-
-    # Lagrangian pieces of Eq. 18:  -phi_i + psi * sign(w_i - z_local_i)
-    def lag_term(w, zl, phi_l):
-        s = jnp.sign(w.astype(jnp.float32) - zl.astype(jnp.float32))
-        return fed.psi * s - phi_l.astype(jnp.float32)
-
-    lag_grad = jax.tree.map(lag_term, state.W, state.z_local, state.phi)
-    full_grad = jax.tree.map(lambda a, b: a.astype(jnp.float32) + b,
-                             grads, lag_grad)
-
-    # omega step: plain SGD (faithful Eq. 18) or Adam (paper's Section V-D)
-    new_opt = state.opt
-    if fed.omega_optimizer == "adam" and state.opt is not None:
-        cnt = state.opt["count"] + act.astype(jnp.int32)
-        b1, b2 = fed.adam_b1, fed.adam_b2
-
-        def upd_m(m, g):
-            return b1 * m + (1 - b1) * g.astype(jnp.float32)
-
-        def upd_v(v, g):
-            return b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32))
-
-        m = jax.tree.map(upd_m, state.opt["m"], grads)
-        v = jax.tree.map(upd_v, state.opt["v"], grads)
-        bc1 = 1 - b1 ** jnp.maximum(cnt, 1).astype(jnp.float32)
-        bc2 = 1 - b2 ** jnp.maximum(cnt, 1).astype(jnp.float32)
-
-        def adam_step(w, m_l, v_l, lg):
-            r1 = bc1.reshape((-1,) + (1,) * (w.ndim - 1))
-            r2 = bc2.reshape((-1,) + (1,) * (w.ndim - 1))
-            upd = (m_l / r1) / (jnp.sqrt(v_l / r2) + fed.adam_eps)
-            # consensus terms stay linear (un-preconditioned)
-            return w.astype(jnp.float32) - fed.alpha_w * (upd + lg)
-
-        W_prop = jax.tree.map(adam_step, state.W, m, v, lag_grad)
-        new_opt = {"m": m, "v": v, "count": cnt}
-    else:
-        W_prop = jax.tree.map(
-            lambda w, g: w.astype(jnp.float32) - fed.alpha_w * g,
-            state.W, full_grad)
+    (W_prop, new_opt, comp_prop, eps_prop, loss_i, g_i, G_i,
+     full_grad) = _client_block_updates(
+        state.W, state.z_local, state.phi, state.eps, state.lam, state.opt,
+        state.comp, batch, noise_keys, act, local_loss=local_loss, fed=fed,
+        c3=c3, n_samples=n_samples, d_dim=d_dim, taylor=taylor)
 
     def mask_leaves(new, old):
         m = act.reshape((-1,) + (1,) * (new.ndim - 1))
@@ -297,16 +377,9 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     # the cached direction from their last participation.
     new_comp = state.comp
     if taylor:
-        cb = fed.compensation_beta
-        comp_prop = jax.tree.map(lambda c, g: cb * c + (1.0 - cb) * g,
-                                 state.comp, full_grad)
         new_comp = jax.tree.map(mask_leaves, comp_prop, state.comp)
 
-    # eps update (Eq. 19):  d/deps [ (eta + c3/eps) G ] = -c3 G / eps^2
-    d_eps = -fed.dro_weight * c3 * G_i \
-        / jnp.square(jnp.maximum(state.eps, fed.eps_min)) + state.lam
-    eps_new = eps_feasible(state.eps - fed.alpha_eps * d_eps, fed)
-    eps_new = jnp.where(act, eps_new, state.eps)
+    eps_new = jnp.where(act, eps_prop, state.eps)
 
     # ---------------- Step 2: server updates (z, lambda) -------------------
     # Byzantine clients corrupt the message the server sees in the sign sum.
@@ -442,9 +515,336 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     return new_state, metrics
 
 
+def bafdp_round_sparse(state: FedState, batch: Any, key, *,
+                       local_loss: LocalLoss, fed: FedConfig, c3: float,
+                       n_samples: int, d_dim: int, byz_mask: jnp.ndarray,
+                       idx: Any, stale: Any = None, weight: Any = None,
+                       arrivals: Any = None,
+                       batch_gathered: bool = None) -> Tuple[
+                           FedState, Dict[str, jnp.ndarray]]:
+    """The active-subset round path: one BAFDP round in O(S) per-round
+    compute and memory over the big per-client leaves.
+
+    Where :func:`bafdp_round` vmaps gradients, Adam state, Taylor
+    compensation and the dual steps over all C clients and masks the
+    inactive rows, this round *gathers* only the round's S winner rows of
+    every per-client leaf (``W``, ``z_local``, ``phi``, ``lam``, ``eps``,
+    ``tau``, ``opt.{m,v,count}``, ``comp``) into (S_max, ...) blocks, runs
+    the identical per-client math on those blocks, and *scatters* the
+    results back.  Only the (C,)-shaped vectors (``lam``, ``eps``,
+    ``tau``, Adam ``count``, the per-client noise keys) are touched
+    fleet-wide — no dense (C, D) intermediate is ever materialized, which
+    is what makes a C=1M round executable.
+
+    Contract (the padded row format ``core/schedule.Schedule.padded_rows``
+    emits):
+
+    * ``idx``: (S_max,) int client ids; the sentinel ``C`` (== n_clients)
+      marks padding.  S_max is static, so the round jits once.
+    * ``stale``: (S_max,) consumption age of each delivered message
+      (admission age ``d``); drives the FedAsync decay ``s(d)`` and the
+      Taylor extrapolation exactly like the dense round's ``stale``.
+      ``None`` = all-fresh.
+    * ``weight``: (S_max,) validity weights — 1 for a real delivery, 0 for
+      padding.  ``None`` = all-real.  Entries with ``weight == 0`` or
+      ``idx >= C`` are padding: they contribute exact zeros to every
+      reduction and never write back.
+
+    Requires ``fed.consensus_scope == "active"`` (Eq. 20/22 consume only
+    the S delivered messages; the ``"all"`` scope is inherently O(C)).
+    Bit-parity: for a duplicate-free round this is bit-identical to the
+    dense masked round — :func:`bafdp_round` with the ``"active"`` scope,
+    which runs THIS function over the full-width block (``idx`` =
+    arange(C), ``weight`` = the activity mask, an O(C) masked
+    computation).  The contract holds because (a) rows are stably sorted
+    by client id, so the consensus left-fold visits clients in ascending
+    order in both calls, (b) zero-weight rows are exact no-ops in every
+    fold (see ``kernels/ref.fold_weighted_rowsum``), and (c) the masked
+    and the gathered call share one code path, so XLA cannot compile
+    their per-row math differently the way two structurally distinct
+    programs do.  Consequently the order of ``idx`` entries never
+    matters.
+
+    FedBuff duplicate deliveries (the same client id twice in ``idx``)
+    follow a left-fold semantics: every delivery enters the Eq. (20)
+    consensus sum with its own admission-age decay weight (the stable
+    sort preserves arrival order between equal ids), while the state
+    write-back folds the deliveries in arrival order, so the LAST one
+    wins — enforced explicitly (only each client's last occurrence
+    scatters; XLA's repeated-index scatter order is unspecified).  With
+    per-client batches duplicate rows write identical values anyway;
+    with ``batch_gathered=True`` each delivery may carry its own data
+    and the last delivery's update is the one kept.  Randomized
+    Byzantine corruption (``gaussian``) and the cross-client ``alie``
+    statistics are drawn over the gathered block, not the fleet, so those
+    attacks differ from the dense round's draws; deterministic attacks
+    match bit-for-bit.
+
+    ``batch`` leaves may be per-client ``(C, b, ...)`` (gathered here) or
+    pre-gathered ``(S_max, b, ...)`` (the million-client path, where a
+    per-client batch cannot exist).  ``batch_gathered`` disambiguates:
+    ``None`` infers from the leading dim — C means per-client, which
+    wins when S_max == C (the dense-delegation case) — and ``True`` /
+    ``False`` force the interpretation (pass ``True`` explicitly if you
+    feed pre-gathered blocks on a fleet where S_max could equal C).
+    Metrics are computed over the delivered block (``loss``,
+    ``data_loss``, ``eps_mean``, ``lambda_mean``, ``n_active`` match the
+    dense round bit-for-bit / to float tolerance; ``lipschitz``,
+    ``consensus_gap``, ``staleness_mean`` and ``compensation_norm`` are
+    subset statistics — the fleet-wide versions are O(C D)).
+    """
+    sign_message = fed.resolved_sign_message      # validates the knob
+    if fed.staleness_compensation not in ("none", "taylor"):
+        raise ValueError(
+            f"unknown staleness_compensation: {fed.staleness_compensation!r}")
+    if fed.consensus_scope != "active":
+        raise ValueError(
+            "bafdp_round_sparse needs consensus_scope='active' (the 'all' "
+            "scope sums every client's last message — inherently O(C); use "
+            "the dense bafdp_round for it)")
+    taylor = fed.staleness_compensation == "taylor"
+    if taylor and state.comp is None:
+        raise ValueError(
+            "staleness_compensation='taylor' needs FedState.comp — "
+            "init_fed_state with the same FedConfig")
+    C = byz_mask.shape[0]
+    idx = jnp.asarray(idx).astype(jnp.int32)
+    (S,) = idx.shape
+    w_row = jnp.ones((S,), jnp.float32) if weight is None \
+        else jnp.asarray(weight).astype(jnp.float32)
+    stale_row = jnp.zeros((S,), jnp.float32) if stale is None \
+        else jnp.asarray(stale).astype(jnp.float32)
+    # normalize padding (out-of-range id OR zero weight; negative ids
+    # would otherwise clip-gather client 0 into the consensus with full
+    # weight while their write-back is dropped), then canonicalize to
+    # ascending client id: the stable sort puts padding last, preserves
+    # FedBuff arrival order between duplicate ids, and makes the consensus
+    # fold visit clients in the dense round's ascending order — so row
+    # order in idx can never change the result
+    w_row = jnp.where((idx < 0) | (idx >= C), 0.0, w_row)
+    idx = jnp.where(w_row > 0.0, idx, C)
+    order = jnp.argsort(idx, stable=True)
+    idx, stale_row, w_row = idx[order], stale_row[order], w_row[order]
+    gid = jnp.minimum(idx, C - 1)        # clipped gather index for padding
+    # deterministic left-fold write-back: only each client's LAST delivery
+    # (arrival order; rows are stably sorted) writes state.  With
+    # per-client batches duplicate rows are identical anyway, but
+    # pre-gathered (batch_gathered=True) deliveries may carry distinct
+    # data — and XLA's scatter order for repeated indices is unspecified,
+    # so last-wins must be enforced, not assumed.
+    is_last = jnp.concatenate([idx[:-1] != idx[1:],
+                               jnp.ones((1,), bool)]) if S > 1 \
+        else jnp.ones((1,), bool)
+    write_idx = jnp.where(is_last, idx, C)
+
+    t = state.t
+    stale_v = stale_row
+    s_w = staleness_weights(stale_v, fed) * w_row          # (S,) decay+mask
+    tau_g = jnp.take(state.tau, gid, axis=0, mode="clip")
+    s_w_dual = staleness_weights((t - tau_g).astype(jnp.float32), fed)
+
+    k_act, k_noise, k_byz = jax.random.split(key, 3)
+    del k_act  # the active set IS idx; split kept so the noise/byz key
+    #            stream matches the dense round bit-for-bit
+    noise_keys = jax.random.split(k_noise, C)[gid]         # O(C) keys, (C,)
+    byz_g = jnp.take(byz_mask, gid, axis=0, mode="clip") & (w_row > 0.0)
+
+    # ---------------- gather the round's S rows of every big leaf ---------
+    W_g = gather_clients(state.W, gid)
+    zl_g = gather_clients(state.z_local, gid)
+    phi_g = gather_clients(state.phi, gid)
+    eps_g = jnp.take(state.eps, gid, axis=0, mode="clip")
+    lam_g = jnp.take(state.lam, gid, axis=0, mode="clip")
+    opt_g = None
+    if state.opt is not None:
+        opt_g = {"m": gather_clients(state.opt["m"], gid),
+                 "v": gather_clients(state.opt["v"], gid),
+                 "count": jnp.take(state.opt["count"], gid, axis=0,
+                                   mode="clip")}
+    comp_g = gather_clients(state.comp, gid) if state.comp is not None \
+        else None
+
+    def pick_batch(l):
+        if batch_gathered is None:
+            per_client = l.shape[0] == C           # wins when S == C
+            if not per_client and l.shape[0] != S:
+                raise ValueError(
+                    f"batch leaf leading dim {l.shape[0]} is neither "
+                    f"n_clients={C} nor the padded block size {S}")
+        else:
+            per_client = not batch_gathered
+            want = C if per_client else S
+            if l.shape[0] != want:
+                raise ValueError(
+                    f"batch_gathered={batch_gathered}: expected batch leaf "
+                    f"leading dim {want}, got {l.shape[0]}")
+        if per_client:
+            return jnp.take(l, gid, axis=0, mode="clip")
+        # pre-gathered rows arrive in the ORIGINAL idx order — permute
+        # them along with the canonicalized (sorted) rows
+        return jnp.take(l, order, axis=0)
+
+    batch_g = jax.tree.map(pick_batch, batch)
+
+    # ---------------- Step 1 on the gathered block ------------------------
+    (W_prop, opt_prop, comp_prop, eps_prop, loss_i, g_i, G_i,
+     full_grad) = _client_block_updates(
+        W_g, zl_g, phi_g, eps_g, lam_g, opt_g, comp_g, batch_g, noise_keys,
+        jnp.ones((S,), jnp.int32), local_loss=local_loss, fed=fed, c3=c3,
+        n_samples=n_samples, d_dim=d_dim, taylor=taylor)
+
+    # ---------------- scatter state writes back ---------------------------
+    tau_new = state.tau.at[write_idx].set(t.astype(state.tau.dtype),
+                                          mode="drop")
+    W_new = scatter_clients(state.W, write_idx, W_prop)
+    new_opt = state.opt
+    if fed.omega_optimizer == "adam" and state.opt is not None:
+        new_opt = {"m": scatter_clients(state.opt["m"], write_idx,
+                                        opt_prop["m"]),
+                   "v": scatter_clients(state.opt["v"], write_idx,
+                                        opt_prop["v"]),
+                   "count": state.opt["count"].at[write_idx].set(
+                       opt_prop["count"], mode="drop")}
+    new_comp = state.comp
+    comp_blocks = comp_g
+    if taylor:
+        new_comp = scatter_clients(state.comp, write_idx, comp_prop)
+        comp_blocks = comp_prop
+    eps_new = state.eps.at[write_idx].set(eps_prop, mode="drop")
+
+    wsum_act = jnp.maximum(jnp.sum(w_row), 1.0)
+
+    if fed.local_steps == 0:
+        # structurally consensus-free round — same contract as the dense
+        # branch: the sign all-reduce must be absent from the program
+        a1_t = reg_decay(fed.alpha_lambda, t, fed.reg_decay_pow)
+        lam_new = jnp.maximum(state.lam + fed.alpha_lambda * (
+            (eps_new - fed.privacy_budget_a) - a1_t * state.lam), 0.0)
+        new_state = FedState(W=W_new, z=state.z, z_local=state.z_local,
+                             phi=state.phi, lam=lam_new, eps=eps_new,
+                             t=t + 1, opt=new_opt, tau=tau_new,
+                             comp=new_comp)
+        metrics = {
+            "loss": jnp.sum(loss_i * w_row) / wsum_act,
+            "data_loss": jnp.sum(g_i * w_row) / wsum_act,
+            "lipschitz": jnp.sum(G_i * w_row) / wsum_act,
+            "eps_mean": jnp.mean(eps_new),
+            "lambda_mean": jnp.mean(lam_new),
+            "consensus_gap": jnp.zeros(()),
+            "n_active": jnp.sum(w_row),
+            "staleness_mean": jnp.sum(stale_v * w_row) / wsum_act,
+            "staleness_weight_mean": jnp.sum(
+                staleness_weights(stale_v, fed) * w_row) / wsum_act,
+            "compensation_norm": jnp.zeros(()),
+        }
+        return new_state, metrics
+
+    do_consensus = (t % fed.local_steps) == (fed.local_steps - 1)
+
+    # ---------------- Step 2: server consensus over the S messages --------
+    W_sent = byz_lib.apply_attack(fed.attack, k_byz, W_prop, byz_g)
+    comp_norm = jnp.zeros(())
+    W_srv = W_sent
+    if taylor:
+        W_srv = compensate_stale(W_sent, comp_blocks, stale_v, fed)
+        num = sum(jnp.sum(jnp.abs(a - b.astype(jnp.float32)))
+                  for a, b in zip(jax.tree.leaves(W_srv),
+                                  jax.tree.leaves(W_sent)))
+        den = float(sum(l.size for l in jax.tree.leaves(W_sent)))
+        comp_norm = jnp.where(do_consensus, num / max(den, 1.0), 0.0)
+
+    if fed.fedbuff_lr_norm:
+        # the padded row carries the realized K natively (duplicate
+        # deliveries included) — sum(weight) IS the arrivals count
+        k_arr = jnp.sum(w_row) if arrivals is None \
+            else jnp.asarray(arrivals).astype(jnp.float32)
+        lr_scale = k_arr / C
+
+    def z_step(z_l, w_l, phi_l):
+        zf = z_l.ravel()
+        # dual term over the consumed messages: sum_j w_j phi_j / C, the
+        # same left-fold the active-scope dense round runs over C rows
+        phi_m = kref.fold_weighted_rowsum(phi_l.reshape(S, -1), w_row) / C
+        z_upd = kops.sign_consensus(zf, w_l.reshape(S, -1), phi_m, s_w,
+                                    fed.psi, fed.alpha_z,
+                                    message=sign_message, n_total=C)
+        if fed.fedbuff_lr_norm:
+            z_upd = (zf.astype(jnp.float32) + lr_scale
+                     * (z_upd.astype(jnp.float32) - zf.astype(jnp.float32))
+                     ).astype(z_l.dtype)
+        return jnp.where(do_consensus, z_upd, zf).reshape(z_l.shape)
+
+    z_new = jax.tree.map(z_step, state.z, W_srv, phi_g)
+
+    a1_t = reg_decay(fed.alpha_lambda, t, fed.reg_decay_pow)
+    lam_new = state.lam + fed.alpha_lambda * (
+        (eps_new - fed.privacy_budget_a) - a1_t * state.lam)
+    lam_new = jnp.maximum(lam_new, 0.0)
+
+    # ---------------- Step 3: delivered clients update phi, sync z --------
+    a2_t = reg_decay(fed.alpha_phi, t, fed.reg_decay_pow)
+    W_dual = W_prop
+    if taylor:
+        lag = jnp.maximum((t - tau_g).astype(jnp.float32) - 1.0, 0.0)
+        W_dual = compensate_stale(W_prop, comp_blocks, lag, fed)
+
+    def phi_step(phi_l, z_l, w_l):
+        upd = (z_l[None].astype(jnp.float32) - w_l.astype(jnp.float32)) \
+            - a2_t * phi_l.astype(jnp.float32)
+        if fed.staleness_decay != "constant":
+            upd = upd * s_w_dual.reshape((-1,) + (1,) * (phi_l.ndim - 1))
+        return phi_l.astype(jnp.float32) + fed.alpha_phi * upd
+
+    phi_blocks = jax.tree.map(phi_step, phi_g, z_new, W_dual)
+    phi_new = scatter_clients(state.phi, write_idx, phi_blocks)
+
+    zl_blocks = jax.tree.map(
+        lambda zl_l, z_l: jnp.broadcast_to(
+            z_l[None].astype(jnp.float32), (S,) + z_l.shape),
+        zl_g, z_new)
+    z_local_new = scatter_clients(state.z_local, write_idx, zl_blocks)
+
+    new_state = FedState(W=W_new, z=z_new, z_local=z_local_new, phi=phi_new,
+                         lam=lam_new, eps=eps_new, t=t + 1, opt=new_opt,
+                         tau=tau_new, comp=new_comp)
+
+    def subset_gap():
+        sq, n = jnp.zeros(()), 0
+        for z_l, w_l in zip(jax.tree.leaves(z_new), jax.tree.leaves(W_prop)):
+            diff = z_l[None].astype(jnp.float32) - w_l.astype(jnp.float32)
+            d = jnp.sum(jnp.square(diff), axis=tuple(range(1, w_l.ndim)))
+            sq = sq + jnp.sum(d * w_row) / wsum_act
+            n += z_l.size
+        return sq / float(max(n, 1))
+
+    metrics = {
+        "loss": jnp.sum(loss_i * w_row) / wsum_act,
+        "data_loss": jnp.sum(g_i * w_row) / wsum_act,
+        "lipschitz": jnp.sum(G_i * w_row) / wsum_act,
+        "eps_mean": jnp.mean(eps_new),
+        "lambda_mean": jnp.mean(lam_new),
+        "consensus_gap": subset_gap(),   # over the delivered block
+        "n_active": jnp.sum(w_row),
+        "staleness_mean": jnp.sum(stale_v * w_row) / wsum_act,
+        "staleness_weight_mean": jnp.sum(
+            staleness_weights(stale_v, fed) * w_row) / wsum_act,
+        "compensation_norm": comp_norm,
+    }
+    return new_state, metrics
+
+
 def make_round_fn(local_loss: LocalLoss, fed: FedConfig, c3: float,
                   n_samples: int, d_dim: int, byz_mask: jnp.ndarray):
     """Convenience: partial + jit."""
     f = functools.partial(bafdp_round, local_loss=local_loss, fed=fed, c3=c3,
                           n_samples=n_samples, d_dim=d_dim, byz_mask=byz_mask)
+    return jax.jit(f)
+
+
+def make_sparse_round_fn(local_loss: LocalLoss, fed: FedConfig, c3: float,
+                         n_samples: int, d_dim: int, byz_mask: jnp.ndarray):
+    """Convenience: partial + jit of the active-subset round."""
+    f = functools.partial(bafdp_round_sparse, local_loss=local_loss, fed=fed,
+                          c3=c3, n_samples=n_samples, d_dim=d_dim,
+                          byz_mask=byz_mask)
     return jax.jit(f)

@@ -51,11 +51,48 @@ def init_fed_state(key, init_params: Callable[[Any], Any],
                "count": jnp.zeros((C,), jnp.int32)}
     comp = None
     if fed.staleness_compensation != "none":
-        comp = jax.tree.map(
-            lambda l: jnp.zeros(l.shape, jnp.float32), W)
+        # zeros_like, NOT zeros(..., float32): a non-f32 model (bf16 LM
+        # configs) must keep the compensation cache in the leaf dtype —
+        # the old f32 literal silently promoted it and broke dtype parity
+        # with W (mask_leaves then downcast every round's EWMA write)
+        comp = jax.tree.map(jnp.zeros_like, W)
     return FedState(W=W, z=z, z_local=z_local, phi=phi, lam=lam, eps=eps,
                     t=jnp.zeros((), jnp.int32), opt=opt,
                     tau=jnp.zeros((C,), jnp.int32), comp=comp)
+
+
+def gather_clients(tree: Any, idx: jnp.ndarray) -> Any:
+    """Gather rows ``idx`` of every (C, ...) leaf into an (S, ...) block.
+
+    Pytree-generic: works on any stack of per-client leaves (``W``,
+    ``phi``, the Adam ``m``/``v``, ``comp``, batches, ...).  ``idx`` is
+    (S,) int; out-of-range indices (the padding sentinel ``C``) clip to
+    the last row — padding rows must therefore be neutralized downstream
+    (weight 0 in reductions, sentinel index at scatter time).  The gather
+    is a pure XLA ``gather``: donation-friendly (the (C, ...) operand is
+    read once) and the only O(C)-touching op on the sparse round's fast
+    path.
+    """
+    return jax.tree.map(lambda l: jnp.take(l, idx, axis=0, mode="clip"),
+                        tree)
+
+
+def scatter_clients(tree: Any, idx: jnp.ndarray, updates: Any) -> Any:
+    """Scatter an (S, ...) block of updated rows back into the (C, ...)
+    leaves.  Out-of-range indices (the padding sentinel ``C``) are
+    dropped, so padded rows never write.  Updates are cast to each leaf's
+    dtype (the round computes in f32).  With XLA donation the scatter
+    updates the resident stack in place — no (C, ...) copy.
+
+    Duplicate in-bounds indices (FedBuff double deliveries) are allowed:
+    the round computes every occurrence from the same pre-round state, so
+    all duplicate writes carry identical values and the scatter is
+    deterministic regardless of XLA's application order (the left-fold
+    "last delivery wins" semantics, degenerate because the folds agree).
+    """
+    return jax.tree.map(
+        lambda l, u: l.at[idx].set(u.astype(l.dtype), mode="drop"),
+        tree, updates)
 
 
 def consensus_gap(state: FedState) -> jnp.ndarray:

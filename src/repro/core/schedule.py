@@ -102,6 +102,13 @@ class Schedule:
         return np.asarray([np.unique(self.round_winners(r)).size
                            for r in range(self.n_rounds)], np.int64)
 
+    @property
+    def s_max(self) -> int:
+        """Max admitted updates in any round — the static pad width of
+        :meth:`padded_rows` (>= 1 so an empty schedule still shapes)."""
+        arr = self.arrivals
+        return int(arr.max()) if arr.size else 1
+
     def round_winners(self, r: int) -> np.ndarray:
         return self.winner_ids[self.offsets[r]:self.offsets[r + 1]]
 
@@ -120,6 +127,44 @@ class Schedule:
             act[w] = True
             last[w] = r
             yield act, r - last
+
+    def padded_rows(self, s_max: Optional[int] = None
+                    ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Yield per-round ``(idx, stale, weight)`` rows in the padded
+        active-subset format ``repro.core.bafdp.bafdp_round_sparse``
+        consumes — the O(S) counterpart of :meth:`rows`:
+
+        * ``idx`` (S_max,) int32 — the round's admitted client ids in
+          admission order, padded with the sentinel ``n_clients``;
+        * ``stale`` (S_max,) float32 — each delivery's admission age
+          (``winner_ages``: Definition 2's ``d``, stamped per *arrival*
+          event, so a duplicate FedBuff delivery carries age 0);
+        * ``weight`` (S_max,) float32 — 1 for a real delivery, 0 for
+          padding.  ``weight.sum()`` is the round's realized arrivals
+          count K (duplicate deliveries included).
+
+        ``s_max`` defaults to :attr:`s_max`; the width is static so a
+        jitted sparse round compiles once for the whole schedule.  Note
+        the ``stale`` row carries the *admission* ages, which the dense
+        ``rows()`` path cannot represent (its per-client staleness vector
+        zeroes the winners); densify with ``stale_c[idx] = stale`` when
+        driving the dense round as the bit-parity oracle.
+        """
+        S = s_max if s_max is not None else self.s_max
+        for r in range(self.n_rounds):
+            w = self.round_winners(r)
+            if w.size > S:
+                raise ValueError(
+                    f"round {r} admits {w.size} updates > s_max={S}; pass "
+                    "padded_rows(s_max=) at least Schedule.s_max")
+            idx = np.full(S, self.n_clients, np.int32)
+            idx[:w.size] = w
+            stale = np.zeros(S, np.float32)
+            stale[:w.size] = self.winner_ages[
+                self.offsets[r]:self.offsets[r + 1]]
+            weight = np.zeros(S, np.float32)
+            weight[:w.size] = 1.0
+            yield idx, stale, weight
 
     def to_sim(self) -> SimResult:
         """Dense ``SimResult`` — lossless except that duplicate FedBuff
@@ -635,6 +680,16 @@ class FederatedRun:
       count (``Schedule.arrivals[t]``, the realized FedBuff K counting
       duplicate deliveries) as ``arrivals=`` — the input
       ``FedConfig.fedbuff_lr_norm`` scales the consensus step by.
+    * ``round_impl`` selects what the schedule feeds the round function:
+      ``"dense"`` (default) feeds per-round ``act=``/``stale=`` (C,)
+      vectors from ``Schedule.rows()``; ``"sparse"`` feeds the padded
+      active-subset rows of ``Schedule.padded_rows()`` as
+      ``idx=``/``stale=``/``weight=`` (S_max,) vectors — the O(S)
+      contract of ``bafdp.bafdp_round_sparse``.  The sparse rows carry
+      per-delivery *admission* ages as ``stale`` (richer than the dense
+      rows, which zero the winners) and require a ``schedule=``.
+    * ``s_max`` overrides the sparse rows' static pad width
+      (default: ``schedule.s_max``).
     * ``round_kwargs`` is the legacy escape hatch: a ``t -> dict`` hook
       that fully replaces the schedule-derived kwargs (used by the
       deprecated dense ``active_masks=``/``staleness=`` paths).
@@ -654,6 +709,8 @@ class FederatedRun:
     key_fn: Optional[Callable[[int], Any]] = None
     round_kwargs: Optional[Callable[[int], Dict[str, Any]]] = None
     n_clients: Optional[int] = None
+    round_impl: str = "dense"
+    s_max: Optional[int] = None
 
     def run(self, state, batch_fn: Callable[[int], Any], key=None, *,
             collect: Tuple[str, ...] = (),
@@ -663,6 +720,14 @@ class FederatedRun:
         """Returns ``(final_state, history)`` with ``history[k]`` one entry
         per round for every ``k`` in ``collect`` (``derive[k](state, m)``
         when supplied, else ``float(metrics[k])``)."""
+        if self.round_impl not in ("dense", "sparse"):
+            raise ValueError(
+                f"unknown round_impl: {self.round_impl!r} "
+                "(expected 'dense' or 'sparse')")
+        if self.round_impl == "sparse" and self.schedule is None:
+            raise ValueError(
+                "round_impl='sparse' needs a schedule= (the padded "
+                "idx/stale/weight rows come from Schedule.padded_rows)")
         if self.schedule is not None and self.round_kwargs is not None:
             raise ValueError("pass either schedule or round_kwargs, not both")
         if self.feed_arrivals and self.schedule is None:
@@ -687,21 +752,35 @@ class FederatedRun:
 
         derive = derive or {}
         hist: Dict[str, List[Any]] = {k: [] for k in collect}
-        rows = self.schedule.rows() if self.schedule is not None else None
+        sparse = self.round_impl == "sparse"
+        if self.schedule is None:
+            rows = None
+        elif sparse:
+            rows = self.schedule.padded_rows(self.s_max)
+        else:
+            rows = self.schedule.rows()
         arrivals = self.schedule.arrivals \
             if self.schedule is not None and self.feed_arrivals else None
         for t in range(self.rounds):
             if rows is not None:
-                act, stale = next(rows)
+                row = next(rows)
             if t < self.start:
                 continue                  # replay keeps staleness honest
             kwargs: Dict[str, Any] = {}
             if self.round_kwargs is not None:
                 kwargs.update(self.round_kwargs(t))
+            elif rows is not None and sparse:
+                kwargs["idx"], kwargs["stale"], kwargs["weight"] = row
+                if not self.feed_staleness:
+                    # honor the opt-out exactly like the dense branch: the
+                    # round then treats every delivery as fresh (age 0)
+                    del kwargs["stale"]
+                if arrivals is not None:
+                    kwargs["arrivals"] = np.int32(arrivals[t])
             elif rows is not None:
-                kwargs["act"] = act
-                if self.feed_staleness:
-                    kwargs["stale"] = stale
+                kwargs["act"], kwargs["stale"] = row
+                if not self.feed_staleness:
+                    del kwargs["stale"]
                 if arrivals is not None:
                     kwargs["arrivals"] = np.int32(arrivals[t])
             kt = self.key_fn(t) if self.key_fn is not None \

@@ -16,6 +16,7 @@ Mesh axes: ("data", "model") single pod, ("pod", "data", "model") multi-pod.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Optional, Sequence, Tuple
 
@@ -101,8 +102,17 @@ class ShardingPlan:
     inner_dp: bool = False
 
     # ------------------------------------------------------------------
-    def param_spec_tree(self, params_shape: Any, client_dim: bool = False):
-        """PartitionSpec tree for model params (or stacked client params)."""
+    def param_spec_tree(self, params_shape: Any, client_dim: bool = False,
+                        client_axis: Any = "__fed__"):
+        """PartitionSpec tree for model params (or stacked client params).
+
+        ``client_axis`` overrides the mesh axis placed on the leading
+        client dim when ``client_dim``: the default sentinel resolves to
+        the plan's federated axis (resident (C, ...) stacks); ``None``
+        replicates the leading dim (gathered (S, ...) blocks)."""
+        if client_axis == "__fed__":
+            client_axis = self.fed_axis
+
         def leaf_spec(path, leaf):
             path_s = _path_str(path)
             head = path_s.split("/")[0]
@@ -114,29 +124,45 @@ class ShardingPlan:
                 spec = list(greedy_spec(path_s, leaf.shape, self.mesh,
                                         skip=skip, fsdp=self.fsdp))
             if client_dim:
-                spec[0] = self.fed_axis
+                spec[0] = client_axis
             return P(*spec)
 
         return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
 
-    def fed_state_specs(self, state_shape) -> Any:
-        """Spec tree matching a FedState of this arch."""
+    def fed_state_specs(self, state_shape, *, gathered: bool = False) -> Any:
+        """Spec tree matching a FedState of this arch.
+
+        ``gathered=False`` (default): the resident state — every
+        per-client leaf carries a leading (C, ...) dim sharded over the
+        federated mesh axis.
+
+        ``gathered=True``: specs for the ACTIVE-SUBSET blocks the sparse
+        round path (``bafdp.bafdp_round_sparse`` via
+        ``fed_state.gather_clients``) extracts per round — same tree
+        structure, but the leading (S_max, ...) block dim REPLICATES
+        across the federated axis (every shard needs the whole round's S
+        winner rows for the Eq. 20 consensus fold; S_max is tiny, so
+        replication costs ~S/C of the resident footprint).  Body dims
+        keep their model-axis placement.  Non-per-client leaves (``z``,
+        ``t``) keep their resident specs.
+        """
         from repro.core.fed_state import FedState
-        W = self.param_spec_tree(state_shape.W, client_dim=True)
+        client_axis = None if gathered else self.fed_axis
+        spec = functools.partial(self.param_spec_tree, client_dim=True,
+                                 client_axis=client_axis)
+        W = spec(state_shape.W)
         z = self.param_spec_tree(state_shape.z, client_dim=False)
-        z_local = self.param_spec_tree(state_shape.z_local, client_dim=True)
-        phi = self.param_spec_tree(state_shape.phi, client_dim=True)
-        vec = P(self.fed_axis)
+        z_local = spec(state_shape.z_local)
+        phi = spec(state_shape.phi)
+        vec = P(client_axis)
         opt = None
         if state_shape.opt is not None:
-            opt = {"m": self.param_spec_tree(state_shape.opt["m"],
-                                             client_dim=True),
-                   "v": self.param_spec_tree(state_shape.opt["v"],
-                                             client_dim=True),
+            opt = {"m": spec(state_shape.opt["m"]),
+                   "v": spec(state_shape.opt["v"]),
                    "count": vec}
         comp = None
         if getattr(state_shape, "comp", None) is not None:
-            comp = self.param_spec_tree(state_shape.comp, client_dim=True)
+            comp = spec(state_shape.comp)
         return FedState(W=W, z=z, z_local=z_local, phi=phi, lam=vec, eps=vec,
                         t=P(), opt=opt, tau=vec, comp=comp)
 

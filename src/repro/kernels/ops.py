@@ -9,6 +9,7 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +28,11 @@ def _resolve(impl: str) -> str:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("psi", "alpha_z", "message", "impl"))
+                   static_argnames=("psi", "alpha_z", "message", "impl",
+                                    "n_total"))
 def sign_consensus(z, W, phi_mean, weights, psi: float, alpha_z: float,
-                   message: str = "f32", impl: str = "auto"):
+                   message: str = "f32", impl: str = "auto",
+                   n_total: Optional[int] = None):
     """The unified Eq. (20) consensus-path dispatch: every sign-sum flavour
     — plain mean (``weights=None``), staleness-decayed, and the int8 wire
     format — funnels through one entry point that picks the fused Pallas
@@ -42,20 +45,46 @@ def sign_consensus(z, W, phi_mean, weights, psi: float, alpha_z: float,
     client's s(d)*sign(z - w_i) to an int8 payload + per-client f32 scale
     (lossless for sign messages, 1 byte/coordinate on the wire).  Returns
     z' = z - alpha_z * (phi_mean + psi * sum_i s_i sign(z - w_i) / C).
+
+    ``n_total`` is the weighted-sum-over-S variant (the active-subset
+    round path): W may be a gathered (S_max, D) block — or the full
+    (C, D) stack with inactive rows carrying weight 0 — and the sum is
+    divided by ``n_total`` (the fleet size C) instead of ``W.shape[0]``.
+    On the XLA path the reduction then runs as an order-canonical
+    left-fold over rows (``ref.sign_agg_fold_ref``), which is what makes
+    the masked dense round and the gathered sparse round bit-identical;
+    the fused TPU kernels keep their tiled reduction and agree to float
+    tolerance.  Requires ``weights`` (the padding/activity mask at
+    minimum).
     """
     impl = _resolve(impl)
+    if n_total is not None and weights is None:
+        raise ValueError("n_total (active-subset reduction) needs weights "
+                         "(the padding/activity mask at minimum)")
     if message == "int8":
         # client-side encode happens in f32 regardless of impl; the wire
         # format (and on TPU the server's HBM read) is what shrinks
         msg = collectives.encode_sign_message(z, W, weights)
         if impl == "xla":
+            if n_total is not None:
+                return ref.sign_agg_int8_fold_ref(z, msg.payload, msg.scale,
+                                                  phi_mean, psi, alpha_z,
+                                                  n_total)
             return ref.sign_agg_int8_ref(z, msg.payload, msg.scale,
                                          phi_mean, psi, alpha_z)
         return sa_k.sign_agg_weighted_int8(z, msg.payload, msg.scale,
                                            phi_mean, psi, alpha_z,
+                                           n_total=n_total or 0,
                                            interpret=(impl == "interpret"))
     if message != "f32":
         raise ValueError(f"unknown sign message format: {message!r}")
+    if n_total is not None:
+        if impl == "xla":
+            return ref.sign_agg_fold_ref(z, W, phi_mean, weights, psi,
+                                         alpha_z, n_total)
+        return sa_k.sign_agg_weighted(z, W, phi_mean, weights, psi, alpha_z,
+                                      n_total=n_total,
+                                      interpret=(impl == "interpret"))
     # impl is already resolved (idempotent through the wrappers' _resolve)
     if weights is None:
         return sign_agg(z, W, phi_mean, psi, alpha_z, impl=impl)

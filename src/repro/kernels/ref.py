@@ -43,6 +43,71 @@ def sign_agg_weighted_ref(z: jnp.ndarray, W: jnp.ndarray,
     return (z.astype(jnp.float32) - alpha_z * dz).astype(z.dtype)
 
 
+def fold_weighted_rowsum(X: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """``sum_j weights[j] * X[j]`` accumulated strictly in row order (a
+    left-fold), in f32.
+
+    XLA's vectorized reductions regroup terms by lane, so a masked sum
+    over C rows and a compact sum over the S surviving rows of the same
+    data do NOT agree bitwise.  A sequential fold does: adding a
+    zero-weight row contributes an exact ``+-0.0`` (an IEEE-754 no-op for
+    any accumulator this fold can produce), so folding C rows with S
+    nonzero weights equals folding just those S rows in the same relative
+    order.  This is the reduction the ``consensus_scope="active"`` dense
+    round and the gathered sparse round share — the dense<->sparse
+    bit-parity contract rests on it.
+    """
+    Xf = X.astype(jnp.float32)
+    wf = weights.astype(jnp.float32)
+
+    def body(j, acc):
+        return acc + wf[j] * Xf[j]
+
+    return jax.lax.fori_loop(0, X.shape[0], body,
+                             jnp.zeros(X.shape[1:], jnp.float32))
+
+
+def sign_agg_fold_ref(z: jnp.ndarray, W: jnp.ndarray, phi_mean: jnp.ndarray,
+                      weights: jnp.ndarray, psi: float, alpha_z: float,
+                      n_total: int) -> jnp.ndarray:
+    """Order-canonical weighted consensus update — the active-scope /
+    sparse-round oracle:
+
+        z - alpha_z * (phi_mean + psi * fold_j w_j sign(z - W_j) / n_total)
+
+    ``W``: (R, D) — R is C for the masked dense round (inactive rows carry
+    weight 0) or the padded S_max for the gathered sparse block (padding
+    rows carry weight 0); ``n_total`` is the fleet size C the sum is
+    normalized by, independent of R.  Rows reduce strictly in order, so
+    the masked C-row fold and the compact ascending-client-id fold are
+    bit-identical (see :func:`fold_weighted_rowsum`).
+    """
+    zf = z.astype(jnp.float32)
+    wf = weights.astype(jnp.float32)
+    Wf = W.astype(jnp.float32)
+
+    def body(j, acc):
+        return acc + wf[j] * jnp.sign(zf - Wf[j])
+
+    wsum = jax.lax.fori_loop(0, W.shape[0], body,
+                             jnp.zeros_like(zf)) / n_total
+    dz = phi_mean.astype(jnp.float32) + psi * wsum
+    return (zf - alpha_z * dz).astype(z.dtype)
+
+
+def sign_agg_int8_fold_ref(z: jnp.ndarray, payload: jnp.ndarray,
+                           scale: jnp.ndarray, phi_mean: jnp.ndarray,
+                           psi: float, alpha_z: float,
+                           n_total: int) -> jnp.ndarray:
+    """Order-canonical consensus update from the int8 wire format.  Each
+    fold term is ``scale[j] * payload[j]`` with ``payload = sign(z - w_j)``
+    exactly, i.e. the identical f32 value :func:`sign_agg_fold_ref` adds —
+    the int8 message stays lossless under the active-scope reduction."""
+    wsum = fold_weighted_rowsum(payload, scale) / n_total
+    dz = phi_mean.astype(jnp.float32) + psi * wsum
+    return (z.astype(jnp.float32) - alpha_z * dz).astype(z.dtype)
+
+
 def sign_agg_int8_ref(z: jnp.ndarray, payload: jnp.ndarray,
                       scale, phi_mean: jnp.ndarray,
                       psi: float, alpha_z: float) -> jnp.ndarray:

@@ -90,7 +90,7 @@ def _weighted_kernel(z_ref, w_ref, phi_ref, sw_ref, out_ref, *, psi: float,
 
 def sign_agg_weighted(z: jnp.ndarray, W: jnp.ndarray, phi_mean: jnp.ndarray,
                       weights: jnp.ndarray, psi: float, alpha_z: float, *,
-                      block: int = BLOCK,
+                      block: int = BLOCK, n_total: int = 0,
                       interpret: bool = True) -> jnp.ndarray:
     """Staleness-weighted consensus update (the FedAsync-decayed Eq. 20
     sum): client i's sign message is scaled by its staleness weight
@@ -100,6 +100,9 @@ def sign_agg_weighted(z: jnp.ndarray, W: jnp.ndarray, phi_mean: jnp.ndarray,
     extra HBM traffic over the unweighted kernel.
 
     z: (D,); W: (C, D); phi_mean: (D,); weights: (C,).  Returns z' (D,).
+    ``n_total`` overrides the sum's divisor (default: the C rows of W) —
+    the active-subset round reduces an (S_max, D) gathered block but still
+    normalizes by the fleet size C.
     """
     (D,) = z.shape
     C = W.shape[0]
@@ -114,7 +117,7 @@ def sign_agg_weighted(z: jnp.ndarray, W: jnp.ndarray, phi_mean: jnp.ndarray,
     grid = (Dp // block,)
     out = pl.pallas_call(
         functools.partial(_weighted_kernel, psi=psi, alpha_z=alpha_z,
-                          n_clients=C),
+                          n_clients=n_total or C),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block), lambda i: (0, i)),
@@ -147,7 +150,7 @@ def _int8_kernel(z_ref, q_ref, phi_ref, sc_ref, out_ref, *, psi: float,
 
 def sign_agg_weighted_int8(z: jnp.ndarray, payload: jnp.ndarray, scale,
                            phi_mean: jnp.ndarray, psi: float, alpha_z: float,
-                           *, block: int = BLOCK,
+                           *, block: int = BLOCK, n_total: int = 0,
                            interpret: bool = True) -> jnp.ndarray:
     """Consensus update from the int8 wire format: the server reads the
     (C, D) message matrix as int8 (1 byte/coordinate of HBM traffic) and
@@ -156,6 +159,8 @@ def sign_agg_weighted_int8(z: jnp.ndarray, payload: jnp.ndarray, scale,
     ``payload``: (C, D) int8 signs in {-1, 0, +1}; ``scale``: (C,) f32
     staleness weights or ``None`` for the unweighted message (exact int32
     reduction).  z: (D,); phi_mean: (D,).  Returns z' (D,).
+    ``n_total`` overrides the divisor (fleet size C) when the payload is
+    a gathered (S_max, D) active-subset block.
     """
     (D,) = z.shape
     C = payload.shape[0]
@@ -172,7 +177,7 @@ def sign_agg_weighted_int8(z: jnp.ndarray, payload: jnp.ndarray, scale,
     grid = (Dp // block,)
     out = pl.pallas_call(
         functools.partial(_int8_kernel, psi=psi, alpha_z=alpha_z,
-                          n_clients=C, weighted=weighted),
+                          n_clients=n_total or C, weighted=weighted),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block), lambda i: (0, i)),

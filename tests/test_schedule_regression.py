@@ -87,6 +87,57 @@ def test_adaptive_schedules_pinned(name, dm_kw, sim_kw):
         f"{name}: schedule changed — {_quorum_digest(sim)}"
 
 
+# ---- sparse-round trajectory pins over the pinned schedules ----------------
+# The schedule digests above pin WHAT the engine emits; these pin that the
+# active-subset round path (round_impl="sparse") reproduces the dense
+# masked round bit-for-bit when trained over those same pinned schedules —
+# so the sparse path can never drift from the pinned trajectories while
+# the digests hold.
+SPARSE_PIN_CASES = [
+    ("hetero", dict(n_clients=8, hetero=1.0, seed=0),
+     dict(active_frac=0.6)),
+    ("flap", dict(n_clients=10, seed=7, dropout_prob=0.3, rejoin_prob=0.2),
+     dict(active_frac=0.5)),
+]
+
+
+def _state_digest(state) -> str:
+    import jax
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(state):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+@pytest.mark.parametrize("name,dm_kw,sim_kw", SPARSE_PIN_CASES,
+                         ids=[c[0] for c in SPARSE_PIN_CASES])
+def test_sparse_round_pinned_to_dense_trajectory(name, dm_kw, sim_kw):
+    import dataclasses
+    from benchmarks.common import train_bafdp
+    from repro.configs import FedConfig
+    from repro.core.schedule import Schedule
+    rounds = 4
+    sim = simulate("async", rounds, DelayModel(**dm_kw), **sim_kw)
+    sched = Schedule.from_sim(sim)
+    fed = FedConfig(n_clients=dm_kw["n_clients"],
+                    active_frac=sim_kw["active_frac"],
+                    staleness_decay="poly")
+    st_sparse, _, _ = train_bafdp("milano", 1, fed, rounds, schedule=sched,
+                                  round_impl="sparse")
+    # dense oracle over the densified padded rows (admission ages)
+    acts = np.zeros((rounds, dm_kw["n_clients"]), bool)
+    stales = np.zeros((rounds, dm_kw["n_clients"]), np.float32)
+    for r, (idx, stale, weight) in enumerate(sched.padded_rows()):
+        k = int(weight.sum())
+        acts[r, idx[:k]] = True
+        stales[r, idx[:k]] = stale[:k]
+    fed_a = dataclasses.replace(fed, consensus_scope="active")
+    st_dense, _, _ = train_bafdp("milano", 1, fed_a, rounds,
+                                 active_masks=acts, staleness=stales)
+    assert _state_digest(st_sparse) == _state_digest(st_dense), \
+        f"{name}: sparse trajectory drifted from the dense masked oracle"
+
+
 def test_repeated_calls_identical():
     """simulate is a pure function of (mode, rounds, DelayModel, knobs)."""
     dm_kw = dict(n_clients=9, hetero=1.3, seed=11, burst_prob=0.2)
