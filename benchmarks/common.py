@@ -139,7 +139,8 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
                 collect: Tuple[str, ...] = (),
                 optimizer: str = "adam",
                 feed_arrivals: Optional[bool] = None,
-                round_impl: str = "dense"):
+                round_impl: str = "dense",
+                ledger=None):
     """Returns (state, cfg, history dict).
 
     ``schedule`` (a sparse :class:`repro.core.schedule.Schedule`, e.g.
@@ -158,6 +159,13 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
     *admission* ages as the staleness input.  Needs a ``schedule=``;
     ``fed.consensus_scope`` is promoted to ``"active"`` automatically
     (the sparse path cannot consume inactive clients' frozen messages).
+
+    ``ledger`` (a :class:`repro.core.privacy.EpsLedger`) turns on
+    per-DELIVERY privacy accounting: every schedule row delivery charges
+    the sending client's current ``eps``, so FedBuff duplicate deliveries
+    spend budget twice; the history gains running worst-client
+    ``dp_eps_basic`` / ``dp_eps_adv`` curves (composition at
+    ``fed.dp_delta``).  Needs a ``schedule=``.
 
     Experimental setting per the paper Sec. V-D: Adam on the data/DRO
     gradient; grid-searched DRO scale (see FedConfig.dro_weight)."""
@@ -202,7 +210,7 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
     run = FederatedRun(
         step=step, rounds=rounds, schedule=schedule,
         n_clients=fed.n_clients, feed_arrivals=feed_arrivals,
-        round_impl=round_impl,
+        round_impl=round_impl, ledger=ledger, ledger_delta=fed.dp_delta,
         round_kwargs=_legacy_round_kwargs(schedule, active_masks, staleness,
                                           rounds, fed.n_clients))
     state, hist = run.run(

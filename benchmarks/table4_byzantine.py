@@ -1,5 +1,7 @@
 """Table IV: Byzantine robustness on Milano H in {1,24} — RSA / DP-RSA at
-ratio 0.1 vs BAFDP at ratios {0, 0.1, 0.3}."""
+ratio 0.1 vs BAFDP at ratios {0, 0.1, 0.3}, plus BAFDP with the
+server-side robust pre-aggregation (``FedConfig.robust_consensus``)
+guarding the sign fold at the highest ratio."""
 from __future__ import annotations
 
 import time
@@ -12,19 +14,29 @@ from repro.configs import FedConfig
 def main(rounds: int = ROUNDS, quick: bool = False) -> List[str]:
     rows = []
     horizons = (1,) if quick else (1, 24)
-    combos = [("RSA", 0.1), ("DP-RSA", 0.1),
-              ("BAFDP", 0.0), ("BAFDP", 0.1), ("BAFDP", 0.3)]
+    # (label, method, byzantine ratio, robust_consensus rule)
+    combos = [("RSA", "RSA", 0.1, "none"),
+              ("DP-RSA", "DP-RSA", 0.1, "none"),
+              ("BAFDP", "BAFDP", 0.0, "none"),
+              ("BAFDP", "BAFDP", 0.1, "none"),
+              ("BAFDP", "BAFDP", 0.3, "none"),
+              ("BAFDP-TM", "BAFDP", 0.3, "trimmed_mean"),
+              ("BAFDP-MED", "BAFDP", 0.3, "median")]
     if quick:
-        combos = [("RSA", 0.1), ("BAFDP", 0.1)]
+        combos = [("RSA", "RSA", 0.1, "none"),
+                  ("BAFDP", "BAFDP", 0.1, "none"),
+                  ("BAFDP-TM", "BAFDP", 0.3, "trimmed_mean")]
     for h in horizons:
-        for method, ratio in combos:
+        for label, method, ratio, rule in combos:
             fed = FedConfig(n_clients=10, byzantine_frac=ratio,
-                            attack="sign_flip" if ratio else "none")
+                            attack="sign_flip" if ratio else "none",
+                            robust_consensus=rule,
+                            robust_trim_frac=0.35)
             t0 = time.time()
             rmse, mae = run_method(method, "milano", h, fed=fed,
                                    rounds=rounds)
             us = (time.time() - t0) * 1e6 / max(rounds, 1)
-            rows.append(f"table4/{method}/ratio{ratio}/H{h},{us:.1f},"
+            rows.append(f"table4/{label}/ratio{ratio}/H{h},{us:.1f},"
                         f"rmse={rmse:.4f};mae={mae:.4f}")
     return rows
 

@@ -180,6 +180,17 @@ class FedConfig:
     n_clients: int = 10            # M + B
     byzantine_frac: float = 0.0    # B / (M + B)
     attack: str = "gaussian"       # byzantine attack kind
+    # magnitude of the message-level attacks (gaussian noise std multiplier,
+    # sign_flip / scaled factor, the same_value constant).  Threaded through
+    # BOTH round paths and the baseline trainers (byzantine.corrupt's
+    # ``scale`` kwarg used to be silently dropped by apply_attack).
+    attack_scale: float = 10.0
+    # window-axis roll (in feature steps) of the ``traffic_shift``
+    # data-poisoning attack: malicious clients train on phase-shifted
+    # forecasting windows, exploiting traffic periodicity (arXiv 2404.14389
+    # flavour — the attacker adapts to the prediction structure, not the
+    # message format).
+    traffic_shift_steps: int = 6
     active_frac: float = 0.6       # S / M per round (asynchrony)
     # internal sampler policy (used only when no external schedule supplies
     # the active set): "uniform" draws S-of-M uniformly (seed behaviour);
@@ -256,6 +267,21 @@ class FedConfig:
     #           masked dense round and the gathered sparse round agree
     #           bit-for-bit on duplicate-free schedules.
     consensus_scope: str = "all"   # all | active
+    # Byzantine-robust pre-aggregation of the round's consensus messages
+    # (Section II-C rules, made weight-aware and padding-safe for the O(S)
+    # block): before the Eq. (20) fold, the delivered messages are reduced
+    # to ONE robust aggregate w_rob (trimmed_mean / median / krum /
+    # centered_clip over the valid block rows) which is broadcast to every
+    # row — the unchanged sign fold then computes
+    #     z - alpha_z * (phi_mean + psi * (sum_j s_j) * sign(z - w_rob) / C)
+    # so staleness decay, fedbuff_lr_norm and the int8 wire format compose
+    # untouched.  Runs through the one shared dense-masked/gathered code
+    # path, so the masked dense round and the gathered sparse round stay
+    # bit-identical.  "none" = bit-compatible with the unguarded fold.
+    robust_consensus: str = "none"   # none|trimmed_mean|median|krum|centered_clip
+    robust_trim_frac: float = 0.2    # per-side trim of robust_consensus=trimmed_mean
+    robust_clip_tau: float = 10.0    # clip radius of robust_consensus=centered_clip
+    robust_clip_iters: int = 3       # Weiszfeld-ish iterations of centered_clip
     # FedBuff server-side learning-rate normalization (arXiv:2106.06639
     # Sec. 3): a K-arrivals buffered round carries K fresh updates out of C
     # clients, so the consensus (z) step is scaled by K/C — K is the

@@ -3,6 +3,22 @@ attention-based aggregation of FedAtt / FedDA.
 
 All rules take a stacked client pytree (leading axis C) and return the
 aggregated pytree.  Distance-based rules flatten clients to (C, D) once.
+
+:func:`robust_block` is the weight-aware, padding-safe variant family the
+round paths use (``FedConfig.robust_consensus``): the same rules over a
+padded block whose rows may be padding/inactive (``weight == 0``), built
+so the aggregate of the valid rows is **bit-identical for any block
+width** — a masked full-width block and a gathered compact block holding
+the same valid messages in the same relative (ascending-client-id) order
+produce the same bits.  The mechanisms: finite ``_BIG`` sentinels push
+invalid entries past every sort (``0 * _BIG`` folds to an exact ``+0.0``,
+where an ``inf`` sentinel would NaN), counts come from exact 0/1 sums,
+rank masks are traced functions of the valid count K, and every
+cross-row reduction is the order-canonical left-fold
+``kernels/ref.fold_weighted_rowsum`` (zero-weight rows are exact IEEE
+no-ops).  Per-row reductions (norms, pairwise distances) keep XLA's
+vectorized form — their extent is the feature axis, identical across
+widths.
 """
 from __future__ import annotations
 
@@ -11,6 +27,12 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.ref import fold_weighted_rowsum
+
+# finite padding sentinel: larger than any real message coordinate, small
+# enough that rank-mask folds stay finite (0 * _BIG == +0.0 exactly)
+_BIG = 1e30
 
 
 def flat_stack(stacked: Any) -> jnp.ndarray:
@@ -55,13 +77,23 @@ def median(stacked: Any) -> Any:
         stacked)
 
 
+def _trim_k(C: int, trim_frac: float) -> int:
+    """Per-side trim count: at least 1 whenever trimming is requested and
+    the block can afford it, never so many that nothing is kept.  The old
+    ``C - 2*int(C*trim_frac) <= 0`` fallback silently degenerated small
+    blocks to a PLAIN mean — zero robustness exactly where a small quorum
+    makes each Byzantine message count the most."""
+    if trim_frac <= 0:
+        return 0
+    return min(max(int(C * trim_frac), 1), (C - 1) // 2)
+
+
 def trimmed_mean(stacked: Any, trim_frac: float = 0.2) -> Any:
     def f(l):
         C = l.shape[0]
-        k = int(C * trim_frac)
+        k = _trim_k(C, trim_frac)
         s = jnp.sort(l.astype(jnp.float32), axis=0)
-        kept = s[k:C - k] if C - 2 * k > 0 else s
-        return jnp.mean(kept, axis=0).astype(l.dtype)
+        return jnp.mean(s[k:C - k], axis=0).astype(l.dtype)
 
     return jax.tree.map(f, stacked)
 
@@ -168,3 +200,125 @@ AGGREGATORS = {
     "geomed": geomed,
     "centered_clip": centered_clip,
 }
+
+
+# ===========================================================================
+# weight-aware, padding-safe block rules (FedConfig.robust_consensus)
+# ===========================================================================
+ROBUST_CONSENSUS_RULES = ("none", "trimmed_mean", "median", "krum",
+                          "centered_clip")
+
+
+def _flat_valid(stacked: Any, weight: Optional[jnp.ndarray]):
+    """(R, D) fp32 matrix, (R,) validity mask and the exact valid count K
+    (a 0/1 sum — exact in f32 under any reduction grouping)."""
+    leaves = jax.tree.leaves(stacked)
+    R = leaves[0].shape[0]
+    X = jnp.concatenate(
+        [l.reshape(R, -1).astype(jnp.float32) for l in leaves], axis=1)
+    w = jnp.ones((R,), jnp.float32) if weight is None \
+        else jnp.asarray(weight).astype(jnp.float32)
+    valid = w > 0.0
+    return X, valid, jnp.sum(valid.astype(jnp.float32))
+
+
+def _sorted_valid_first(X: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Column-wise ascending sort with invalid rows pushed past every real
+    value (finite ``_BIG``): the first K sorted rows are the sorted valid
+    values — bit-identical for any block width holding the same valid
+    set."""
+    return jnp.sort(jnp.where(valid[:, None], X, _BIG), axis=0)
+
+
+def _block_trimmed_mean(X, valid, K, trim_frac: float) -> jnp.ndarray:
+    S = _sorted_valid_first(X, valid)
+    k = jnp.floor(K * trim_frac)
+    if trim_frac > 0:
+        k = jnp.maximum(k, 1.0)               # trim at least one per side
+    k = jnp.maximum(jnp.minimum(k, jnp.floor((K - 1.0) / 2.0)), 0.0)
+    j = jnp.arange(S.shape[0], dtype=jnp.float32)
+    m = ((j >= k) & (j < K - k)).astype(jnp.float32)
+    # rank-mask left-fold: rows past K carry _BIG but weight 0 (exact no-op)
+    return fold_weighted_rowsum(S, m) / jnp.maximum(K - 2.0 * k, 1.0)
+
+
+def _block_median(X, valid, K) -> jnp.ndarray:
+    S = _sorted_valid_first(X, valid)
+    R = S.shape[0]
+    lo = jnp.clip(jnp.floor((K - 1.0) / 2.0), 0, R - 1).astype(jnp.int32)
+    hi = jnp.clip(jnp.floor(K / 2.0), 0, R - 1).astype(jnp.int32)
+    return 0.5 * (jnp.take(S, lo, axis=0) + jnp.take(S, hi, axis=0))
+
+
+def _block_krum(X, valid, K, n_byzantine: int) -> jnp.ndarray:
+    Xz = jnp.where(valid[:, None], X, 0.0)
+    diff = Xz[:, None, :] - Xz[None, :, :]
+    d2 = jnp.sum(jnp.square(diff), axis=-1)                    # (R, R)
+    R = X.shape[0]
+    pair_ok = valid[:, None] & valid[None, :] \
+        & ~jnp.eye(R, dtype=bool)
+    d2 = jnp.where(pair_ok, d2, _BIG)
+    nearest = jnp.sort(d2, axis=1)                             # per-row sort
+    # k nearest neighbours: K - b - 2 of the K-1 valid distances, >= 1
+    k_nn = jnp.clip(K - float(n_byzantine) - 2.0, 1.0,
+                    jnp.maximum(K - 1.0, 1.0))
+    j = jnp.arange(R, dtype=jnp.float32)
+    m = (j < k_nn).astype(jnp.float32)
+    scores = fold_weighted_rowsum(nearest.T, m)                # (R,)
+    # invalid rows must never win argmin — even when every valid score is
+    # itself _BIG-sized (K == 1), so the mask is +inf, not _BIG
+    scores = jnp.where(valid, scores, jnp.inf)
+    return jnp.take(X, jnp.argmin(scores), axis=0)
+
+
+def _block_centered_clip(X, valid, K, center: jnp.ndarray, tau: float,
+                         iters: int) -> jnp.ndarray:
+    v = center.astype(jnp.float32)
+    wv = valid.astype(jnp.float32)
+    Kc = jnp.maximum(K, 1.0)
+    for _ in range(iters):
+        diff = jnp.where(valid[:, None], X - v[None], 0.0)
+        nrm = jnp.sqrt(jnp.sum(jnp.square(diff), axis=1))
+        fac = jnp.minimum(1.0, tau / jnp.maximum(nrm, 1e-9))
+        v = v + fold_weighted_rowsum(diff * fac[:, None], wv) / Kc
+    return v
+
+
+def robust_block(name: str, stacked: Any, weight: Optional[jnp.ndarray],
+                 center: Optional[Any] = None, *, trim_frac: float = 0.2,
+                 n_byzantine: int = 0, clip_tau: float = 10.0,
+                 clip_iters: int = 3) -> Any:
+    """ONE robust aggregate of a padded message block — the
+    ``FedConfig.robust_consensus`` dispatch both round paths share.
+
+    ``stacked`` leaves: (R, ...) — the round's consensus messages, where R
+    is the full fleet width C (masked dense round) or the padded block
+    width S_max (gathered sparse round); ``weight`` (R,) marks the valid
+    deliveries (> 0; ``None`` = all valid).  ``center`` (a plain pytree,
+    required for ``centered_clip``) anchors the clipping at the current
+    consensus z.  Returns a single un-stacked pytree shaped like one row.
+
+    Width invariance (the dense↔sparse bit-parity contract): the result
+    depends only on the multiset of valid rows and their relative order —
+    invalid rows contribute exact no-ops to every reduction.  Duplicate
+    FedBuff deliveries are counted as separate messages (each delivery is
+    a vote), which only the gathered block can express.
+    """
+    X, valid, K = _flat_valid(stacked, weight)
+    if name == "trimmed_mean":
+        v = _block_trimmed_mean(X, valid, K, trim_frac)
+    elif name == "median":
+        v = _block_median(X, valid, K)
+    elif name == "krum":
+        v = _block_krum(X, valid, K, n_byzantine)
+    elif name == "centered_clip":
+        if center is None:
+            raise ValueError("robust_block('centered_clip') needs center=")
+        c = flat_stack(jax.tree.map(lambda l: l[None], center))[0]
+        v = _block_centered_clip(X, valid, K, c, clip_tau, clip_iters)
+    else:
+        raise ValueError(
+            f"unknown robust_consensus rule {name!r} "
+            f"(expected one of {ROBUST_CONSENSUS_RULES[1:]})")
+    template = jax.tree.map(lambda l: l[0], stacked)
+    return unflatten_like(v, template)

@@ -53,6 +53,27 @@ class DelayModel:
     burst_scale: float = 10.0        # latency multiplier during a burst
     dropout_prob: float = 0.0        # P(available client drops, per round)
     rejoin_prob: float = 0.0         # P(dropped client rejoins, per round)
+    # latency-lie adaptive attack (arXiv 2404.14389): the last
+    # round(C * liar_frac) clients — byzantine.byz_mask's convention, so
+    # the liars ARE the message-corrupting clients — REPORT near-zero
+    # delays (honest latency × lie_scale), monopolizing FedBuff arrival
+    # slots and FastestSelection wins.  Draw-free no-op at liar_frac = 0
+    # (pinned schedule digests are untouched).
+    liar_frac: float = 0.0           # fraction of clients lying about latency
+    lie_scale: float = 1e-3          # multiplier applied to a liar's delay
+
+    def liar_mask(self) -> np.ndarray:
+        """(C,) bool — the last ``round(C * liar_frac)`` clients lie."""
+        n_liars = int(round(self.n_clients * self.liar_frac))
+        return np.arange(self.n_clients) >= (self.n_clients - n_liars)
+
+    def lie_row(self, delays: np.ndarray) -> np.ndarray:
+        """Apply the latency lie to one (C,) delay row (no-op when
+        ``liar_frac == 0``); shared by the dense matrix builder and the
+        streaming row provider so both schedules see the same attack."""
+        if self.liar_frac <= 0:
+            return delays
+        return np.where(self.liar_mask(), delays * self.lie_scale, delays)
 
     def client_bases(self) -> np.ndarray:
         rng = np.random.RandomState(self.seed)
@@ -91,7 +112,8 @@ class DelayModel:
         # path therefore matches this bit-for-bit only when burst_prob == 0
         jit = np.stack([self.jitter_row(rng) for _ in range(n_rounds)])
         jit = np.stack([self.burst_row(rng, j) for j in jit])
-        return base * jit + self.comm
+        d = base * jit + self.comm
+        return np.stack([self.lie_row(row) for row in d])
 
     def avail_step(self, rng, cur: np.ndarray) -> np.ndarray:
         """One dropout/rejoin Markov transition (in place on ``cur``);

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
+from repro.core import aggregators as agg_lib
 from repro.core import byzantine as byz_lib
 from repro.core import dro
 from repro.core.fed_state import (FedState, consensus_gap, gather_clients,
@@ -144,6 +145,28 @@ def staleness_weights(stale, fed: FedConfig) -> jnp.ndarray:
     if fed.staleness_decay == "poly":
         return jnp.power(d + 1.0, -fed.staleness_poly_a)
     raise ValueError(f"unknown staleness_decay: {fed.staleness_decay!r}")
+
+
+def _robust_broadcast(W_srv: Any, weight, z: Any, fed: FedConfig) -> Any:
+    """``FedConfig.robust_consensus``: collapse the round's consensus
+    messages to ONE weight-aware robust aggregate (``aggregators.
+    robust_block``) and broadcast it to every block row.  The unchanged
+    Eq. (20) fold then computes
+
+        z - alpha_z * (phi_mean + psi * (sum_j s_j) * sign(z - w_rob) / C)
+
+    so staleness decay, ``fedbuff_lr_norm`` and the int8 wire format
+    compose untouched, and the masked-dense / gathered-sparse bit-parity
+    contract holds (the aggregate is width-invariant; the broadcast rows
+    fold identically)."""
+    w_rob = agg_lib.robust_block(
+        fed.robust_consensus, W_srv, weight, z,
+        trim_frac=fed.robust_trim_frac, n_byzantine=fed.n_byzantine,
+        clip_tau=fed.robust_clip_tau, clip_iters=fed.robust_clip_iters)
+    return jax.tree.map(
+        lambda w_l, r_l: jnp.broadcast_to(
+            r_l.astype(jnp.float32)[None], w_l.shape).astype(w_l.dtype),
+        W_srv, w_rob)
 
 
 def _per_client_objective(local_loss: LocalLoss, fed: FedConfig, c3: float,
@@ -308,6 +331,10 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
         raise ValueError(
             f"unknown consensus_scope: {fed.consensus_scope!r} "
             "(expected 'all' or 'active')")
+    if fed.robust_consensus not in agg_lib.ROBUST_CONSENSUS_RULES:
+        raise ValueError(
+            f"unknown robust_consensus: {fed.robust_consensus!r} "
+            f"(expected one of {agg_lib.ROBUST_CONSENSUS_RULES})")
     taylor = fed.staleness_compensation == "taylor"
     if taylor and state.comp is None:
         raise ValueError(
@@ -353,6 +380,10 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     s_w_dual = staleness_weights((t - state.tau).astype(jnp.float32), fed)
 
     # ---------------- Step 1: active clients update (w_i, eps_i) ----------
+    # data-poisoning attacks corrupt the malicious clients' TRAINING
+    # batches before the local step; message-level attacks apply later
+    batch = byz_lib.poison_batch(fed.attack, batch, byz_mask,
+                                 shift=fed.traffic_shift_steps)
     noise_keys = jax.random.split(k_noise, C)
     (W_prop, new_opt, comp_prop, eps_prop, loss_i, g_i, G_i,
      full_grad) = _client_block_updates(
@@ -382,8 +413,11 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     eps_new = jnp.where(act, eps_prop, state.eps)
 
     # ---------------- Step 2: server updates (z, lambda) -------------------
-    # Byzantine clients corrupt the message the server sees in the sign sum.
-    W_sent = byz_lib.apply_attack(fed.attack, k_byz, W_new, byz_mask)
+    # Byzantine clients corrupt the message the server sees in the sign
+    # sum.  client_ids defaults to arange(C) here — the fleet-shaped block
+    # — so randomized draws are per-client, matching the sparse path.
+    W_sent = byz_lib.apply_attack(fed.attack, k_byz, W_new, byz_mask,
+                                  scale=fed.attack_scale)
 
     if fed.local_steps == 0:
         # structurally consensus-free round (K-local-steps off-round): the
@@ -429,6 +463,12 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
         # off-rounds (local_steps > 1) consume no server message — report 0
         # there, like the structurally consensus-free branch above
         comp_norm = jnp.where(do_consensus, num / max(den, 1.0), 0.0)
+
+    # Byzantine-robust pre-aggregation: collapse the C consumed messages
+    # (this scope consumes every client's last message, so all rows are
+    # valid) to one robust aggregate before the sign fold.
+    if fed.robust_consensus != "none":
+        W_srv = _robust_broadcast(W_srv, None, state.z, fed)
 
     # Eq. (20) consensus: every sign-sum flavour (plain mean / decayed /
     # int8 wire format) goes through ONE dispatch — the fused Pallas kernel
@@ -574,11 +614,12 @@ def bafdp_round_sparse(state: FedState, batch: Any, key, *,
     scatters; XLA's repeated-index scatter order is unspecified).  With
     per-client batches duplicate rows write identical values anyway;
     with ``batch_gathered=True`` each delivery may carry its own data
-    and the last delivery's update is the one kept.  Randomized
-    Byzantine corruption (``gaussian``) and the cross-client ``alie``
-    statistics are drawn over the gathered block, not the fleet, so those
-    attacks differ from the dense round's draws; deterministic attacks
-    match bit-for-bit.
+    and the last delivery's update is the one kept.  EVERY attack in
+    ``byzantine.ATTACKS`` matches the dense active-scope round
+    bit-for-bit: randomized corruption keys off ``(key, leaf, client
+    id)`` and ``alie``'s cross-client statistics are weight-masked
+    left-folds (see ``byzantine.corrupt``), so the draw a client
+    receives never depends on block width or padding.
 
     ``batch`` leaves may be per-client ``(C, b, ...)`` (gathered here) or
     pre-gathered ``(S_max, b, ...)`` (the million-client path, where a
@@ -602,6 +643,10 @@ def bafdp_round_sparse(state: FedState, batch: Any, key, *,
             "bafdp_round_sparse needs consensus_scope='active' (the 'all' "
             "scope sums every client's last message — inherently O(C); use "
             "the dense bafdp_round for it)")
+    if fed.robust_consensus not in agg_lib.ROBUST_CONSENSUS_RULES:
+        raise ValueError(
+            f"unknown robust_consensus: {fed.robust_consensus!r} "
+            f"(expected one of {agg_lib.ROBUST_CONSENSUS_RULES})")
     taylor = fed.staleness_compensation == "taylor"
     if taylor and state.comp is None:
         raise ValueError(
@@ -685,6 +730,10 @@ def bafdp_round_sparse(state: FedState, batch: Any, key, *,
         return jnp.take(l, order, axis=0)
 
     batch_g = jax.tree.map(pick_batch, batch)
+    # data-poisoning attacks corrupt the malicious rows' batches before the
+    # local step (row-local + deterministic, so dense/sparse stay identical)
+    batch_g = byz_lib.poison_batch(fed.attack, batch_g, byz_g,
+                                   shift=fed.traffic_shift_steps)
 
     # ---------------- Step 1 on the gathered block ------------------------
     (W_prop, opt_prop, comp_prop, eps_prop, loss_i, g_i, G_i,
@@ -742,7 +791,13 @@ def bafdp_round_sparse(state: FedState, batch: Any, key, *,
     do_consensus = (t % fed.local_steps) == (fed.local_steps - 1)
 
     # ---------------- Step 2: server consensus over the S messages --------
-    W_sent = byz_lib.apply_attack(fed.attack, k_byz, W_prop, byz_g)
+    # fleet-indexed corruption: client_ids=gid keys each row's draw off the
+    # CLIENT id (padding rows draw client C-1's stream but byz_g already
+    # zeroes them) and weight=w_row masks alie's cross-client statistics —
+    # both are what make the attack width-independent (dense bit-parity)
+    W_sent = byz_lib.apply_attack(fed.attack, k_byz, W_prop, byz_g,
+                                  scale=fed.attack_scale, client_ids=gid,
+                                  weight=w_row)
     comp_norm = jnp.zeros(())
     W_srv = W_sent
     if taylor:
@@ -752,6 +807,11 @@ def bafdp_round_sparse(state: FedState, batch: Any, key, *,
                                   jax.tree.leaves(W_sent)))
         den = float(sum(l.size for l in jax.tree.leaves(W_sent)))
         comp_norm = jnp.where(do_consensus, num / max(den, 1.0), 0.0)
+
+    # Byzantine-robust pre-aggregation over the S delivered messages
+    # (weight-aware: padding rows are invisible to the robust statistics)
+    if fed.robust_consensus != "none":
+        W_srv = _robust_broadcast(W_srv, w_row, state.z, fed)
 
     if fed.fedbuff_lr_norm:
         # the padded row carries the realized K natively (duplicate

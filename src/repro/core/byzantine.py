@@ -3,34 +3,88 @@ arbitrary malicious messages; identity unknown to the server).
 
 Each attack maps the honest message a client *would* send to the corrupted
 one.  ``apply_attack`` operates on stacked client pytrees (leading client
-axis C) given a boolean mask of malicious clients — this is what the server
+axis R) given a boolean mask of malicious clients — this is what the server
 sees in Eq. (20)'s sign sum.
+
+Fleet-indexed randomness: the randomized attacks draw per CLIENT, not per
+block row.  ``gaussian`` derives client ``i``'s draw from
+``fold_in(fold_in(key, leaf), i)`` and ``alie``'s cross-client mean/std are
+computed over the ``weight > 0`` rows only — so the corruption a client's
+message receives depends on (key, client id), never on the width or
+padding of the block it happens to sit in.  That is what makes the masked
+dense round and the gathered sparse round bit-identical under every attack
+(``tests/test_sparse_round.py``); block-shaped draws were the one
+documented dense↔sparse exclusion before this.
+
+Data-poisoning attacks (``label_flip``, ``traffic_shift``) leave the
+message untouched and corrupt the malicious clients' TRAINING BATCHES
+instead — see :func:`poison_batch`.  ``traffic_shift`` is the adaptive
+attack of arXiv 2404.14389 specialized to traffic forecasting: the
+attacker rolls its input windows along the feature/time axis, exploiting
+the diurnal periodicity of cellular traffic so the poisoned gradients look
+statistically plausible.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ref import fold_weighted_rowsum
+
 ATTACKS = ("none", "gaussian", "sign_flip", "same_value", "scaled",
-           "zero", "label_flip", "alie")
+           "zero", "label_flip", "alie", "traffic_shift")
+
+# attacks that corrupt the data, not the message (corrupt() is identity)
+DATA_ATTACKS = ("label_flip", "traffic_shift")
 
 
 def _tree_map2(f, a, b):
     return jax.tree.map(f, a, b)
 
 
-def corrupt(attack: str, key, honest: Any, *, scale: float = 10.0) -> Any:
-    """Corrupted version of a stacked client message (leading axis C)."""
-    if attack in ("none", "label_flip"):
-        # label_flip corrupts the data, not the message; message unchanged.
+def _row_ids(leaves, client_ids) -> jnp.ndarray:
+    R = leaves[0].shape[0]
+    if client_ids is None:
+        # fleet-shaped block: row r IS client r
+        return jnp.arange(R, dtype=jnp.int32)
+    ids = jnp.asarray(client_ids).astype(jnp.int32)
+    if ids.shape != (R,):
+        raise ValueError(
+            f"client_ids shape {ids.shape} != block rows ({R},)")
+    return ids
+
+
+def corrupt(attack: str, key, honest: Any, *, scale: float = 10.0,
+            client_ids: Optional[jnp.ndarray] = None,
+            weight: Optional[jnp.ndarray] = None) -> Any:
+    """Corrupted version of a stacked client message (leading axis R).
+
+    ``client_ids`` (R,) maps block rows to fleet client ids (default:
+    ``arange(R)``, the fleet-shaped block); ``weight`` (R,) marks the valid
+    rows (> 0) whose statistics cross-client attacks may consume (default:
+    all rows).  Randomized draws key off ``(key, leaf, client id)`` and
+    cross-client statistics are weight-masked left-folds, so the same
+    client's corruption is bit-identical whether its message sits in the
+    full-width masked block or a gathered padded block.
+    """
+    if attack == "none" or attack in DATA_ATTACKS:
+        # data attacks corrupt the batch (poison_batch), not the message
         return honest
     if attack == "gaussian":
-        keys = iter(jax.random.split(key, len(jax.tree.leaves(honest))))
-        return jax.tree.map(
-            lambda l: jax.random.normal(next(keys), l.shape, jnp.float32)
-            .astype(l.dtype) * scale, honest)
+        leaves, treedef = jax.tree.flatten(honest)
+        ids = _row_ids(leaves, client_ids)
+        out = []
+        for i, l in enumerate(leaves):
+            leaf_key = jax.random.fold_in(key, i)
+            row_keys = jax.vmap(
+                lambda c, lk=leaf_key: jax.random.fold_in(lk, c))(ids)
+            draw = jax.vmap(
+                lambda k, sh=l.shape[1:]: jax.random.normal(
+                    k, sh, jnp.float32))(row_keys)
+            out.append((draw * scale).astype(l.dtype))
+        return jax.tree.unflatten(treedef, out)
     if attack == "sign_flip":
         return jax.tree.map(lambda l: -scale * l, honest)
     if attack == "same_value":
@@ -41,27 +95,76 @@ def corrupt(attack: str, key, honest: Any, *, scale: float = 10.0) -> Any:
         return jax.tree.map(jnp.zeros_like, honest)
     if attack == "alie":
         # "A Little Is Enough": shift by a small multiple of the cross-client
-        # std so the outlier hides inside the honest spread.
+        # std so the outlier hides inside the honest spread.  Mean/std run
+        # over the weight > 0 rows only (padding and inactive rows would
+        # corrupt the statistics — and change the attack itself), as
+        # order-canonical left-folds so masked-dense and gathered-sparse
+        # agree bitwise (zero-weight rows are exact IEEE no-ops).
+        R = jax.tree.leaves(honest)[0].shape[0]
+        wv = jnp.ones((R,), jnp.float32) if weight is None \
+            else jnp.asarray(weight).astype(jnp.float32)
+        n = jnp.maximum(jnp.sum(wv), 1.0)
+
         def f(l):
-            mu = jnp.mean(l, axis=0, keepdims=True)
-            sd = jnp.std(l, axis=0, keepdims=True)
-            return jnp.broadcast_to(mu - 1.5 * sd, l.shape).astype(l.dtype)
+            lf = l.astype(jnp.float32)
+            mu = fold_weighted_rowsum(lf, wv) / n
+            var = fold_weighted_rowsum(jnp.square(lf - mu[None]), wv) / n
+            row = mu - 1.5 * jnp.sqrt(var)
+            return jnp.broadcast_to(row[None], l.shape).astype(l.dtype)
+
         return jax.tree.map(f, honest)
     raise ValueError(f"unknown attack {attack!r}")
 
 
-def apply_attack(attack: str, key, stacked: Any, byz_mask: jnp.ndarray) -> Any:
-    """Replace malicious clients' messages. stacked leaves: (C, ...);
-    byz_mask: (C,) bool."""
-    if attack == "none" or not bool(byz_mask.shape[0]):
+def apply_attack(attack: str, key, stacked: Any, byz_mask: jnp.ndarray, *,
+                 scale: float = 10.0,
+                 client_ids: Optional[jnp.ndarray] = None,
+                 weight: Optional[jnp.ndarray] = None) -> Any:
+    """Replace malicious clients' messages. stacked leaves: (R, ...);
+    byz_mask: (R,) bool (already row-aligned with the block).  ``scale``,
+    ``client_ids`` and ``weight`` forward to :func:`corrupt`."""
+    if attack == "none" or attack in DATA_ATTACKS \
+            or not bool(byz_mask.shape[0]):
         return stacked
-    bad = corrupt(attack, key, stacked)
+    bad = corrupt(attack, key, stacked, scale=scale,
+                  client_ids=client_ids, weight=weight)
 
     def sel(h, b):
         m = byz_mask.reshape((-1,) + (1,) * (h.ndim - 1))
         return jnp.where(m, b, h)
 
     return _tree_map2(sel, stacked, bad)
+
+
+def poison_batch(attack: str, batch: Any, byz_rows: jnp.ndarray, *,
+                 shift: int = 6) -> Any:
+    """Data-poisoning hook: corrupt the malicious rows' TRAINING BATCHES
+    before the local gradient step (the message-level ``apply_attack``
+    never sees these attacks).
+
+    ``traffic_shift`` rolls each malicious row's samples ``shift`` steps
+    along the last (window/feature) axis — a diurnal phase shift that
+    exploits traffic periodicity, so the poisoned gradients stay inside
+    the honest magnitude envelope (arXiv 2404.14389's adaptive-poisoning
+    flavour).  Leaves with fewer than 2 axes (per-row scalars) are left
+    untouched.  Deterministic and row-local, so the masked dense round and
+    the gathered sparse round poison the same client identically.
+
+    Every other attack returns ``batch`` unchanged (``label_flip`` remains
+    a documented placeholder: the paper's message-level experiments never
+    exercise it).
+    """
+    if attack != "traffic_shift":
+        return batch
+
+    def f(l):
+        if l.ndim < 2:
+            return l
+        rolled = jnp.roll(l, shift, axis=-1)
+        m = byz_rows.reshape((-1,) + (1,) * (l.ndim - 1))
+        return jnp.where(m, rolled, l)
+
+    return jax.tree.map(f, batch)
 
 
 def byz_mask(n_clients: int, n_byzantine: int) -> jnp.ndarray:

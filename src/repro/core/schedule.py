@@ -305,7 +305,9 @@ class _StreamRows:
     def _gen_delay_row(self) -> np.ndarray:
         dm = self._dm
         jit = dm.burst_row(self._burst_rng, dm.jitter_row(self._jit_rng))
-        return self._bases * jit + dm.comm
+        # latency-lie attack applied identically to the dense builder's
+        # rows (draw-free, so stream/dense parity is unaffected)
+        return dm.lie_row(self._bases * jit + dm.comm)
 
     def delays(self, r: int) -> np.ndarray:
         if r >= self._R:
@@ -699,6 +701,15 @@ class FederatedRun:
     * ``n_clients``, when set, is validated against the schedule's fleet
       size — a mismatched schedule would otherwise broadcast or die with
       an opaque XLA shape error deep inside the round function.
+    * ``ledger``, when set to a :class:`repro.core.privacy.EpsLedger`,
+      records one privacy spend per DELIVERY: every schedule row entry
+      with ``weight > 0`` (sparse) or every active client (dense) charges
+      that client's current ``state.eps`` before the round runs — so
+      FedBuff duplicate deliveries spend budget twice, which per-round
+      accounting misses.  Needs a ``schedule=`` and a state carrying a
+      per-client ``eps`` vector.  ``history`` then gains running
+      worst-client ``dp_eps_basic`` / ``dp_eps_adv`` curves (advanced
+      composition at ``ledger_delta``).
     """
     step: Callable[..., Tuple[Any, Dict[str, Any]]]
     rounds: int
@@ -711,6 +722,8 @@ class FederatedRun:
     n_clients: Optional[int] = None
     round_impl: str = "dense"
     s_max: Optional[int] = None
+    ledger: Optional[Any] = None          # privacy.EpsLedger
+    ledger_delta: float = 1e-5
 
     def run(self, state, batch_fn: Callable[[int], Any], key=None, *,
             collect: Tuple[str, ...] = (),
@@ -748,10 +761,18 @@ class FederatedRun:
                 f"run expects {self.n_clients}")
         if self.key_fn is None and key is None:
             raise ValueError("need a base key (or a key_fn)")
+        if self.ledger is not None and self.schedule is None:
+            raise ValueError(
+                "ledger= needs a schedule= (per-delivery privacy spends "
+                "come from the schedule's participation rows; an internal "
+                "sampler's picks are invisible to the driver)")
         import jax  # deferred: schedule building stays jax-free
 
         derive = derive or {}
         hist: Dict[str, List[Any]] = {k: [] for k in collect}
+        if self.ledger is not None:
+            hist["dp_eps_basic"] = []
+            hist["dp_eps_adv"] = []
         sparse = self.round_impl == "sparse"
         if self.schedule is None:
             rows = None
@@ -785,7 +806,26 @@ class FederatedRun:
                     kwargs["arrivals"] = np.int32(arrivals[t])
             kt = self.key_fn(t) if self.key_fn is not None \
                 else jax.random.fold_in(key, t)
+            if self.ledger is not None:
+                eps_now = getattr(state, "eps", None)
+                if eps_now is None:
+                    raise ValueError(
+                        "ledger= needs a state with a per-client eps "
+                        "vector (FedState); baseline trainer states have "
+                        "no privacy decision variable to account")
+                if sparse:
+                    r_idx, _, r_w = row
+                    ids = np.asarray(r_idx)[np.asarray(r_w) > 0]
+                else:
+                    ids = np.flatnonzero(np.asarray(row[0]))
+                # each delivered message spends the eps the client's local
+                # mechanism runs with THIS round (pre-update state)
+                self.ledger.record(ids, np.asarray(eps_now)[ids])
             state, m = self.step(state, batch_fn(t), kt, **kwargs)
+            if self.ledger is not None:
+                tot = self.ledger.totals(self.ledger_delta)
+                hist["dp_eps_basic"].append(tot["dp_eps_basic"])
+                hist["dp_eps_adv"].append(tot["dp_eps_adv"])
             if on_round is not None:
                 on_round(t, state, m)
             for k in collect:

@@ -96,6 +96,9 @@ class BaselineTrainer:
         server = st["server"]
         W0 = _broadcast(server, C)
         loc_keys = jax.random.split(k_loc, C)
+        # data-poisoning attacks corrupt the malicious clients' batches
+        batch = byz_lib.poison_batch(fed.attack, batch, byz,
+                                     shift=fed.traffic_shift_steps)
 
         def local(p0, b_i, k):
             return _local_sgd(self.loss, p0, b_i, k, self.lr,
@@ -119,7 +122,8 @@ class BaselineTrainer:
                 * jax.random.normal(next(nk), l.shape, jnp.float32)
                 .astype(l.dtype), W1)
 
-        W_sent = byz_lib.apply_attack(fed.attack, k_byz, W1, byz)
+        W_sent = byz_lib.apply_attack(fed.attack, k_byz, W1, byz,
+                                      scale=fed.attack_scale)
 
         # loss over the ACTIVE set only (inactive clients hold frozen server
         # params — averaging them in made baseline curves incomparable with

@@ -1,0 +1,541 @@
+"""Byzantine robustness on the O(S) sparse path (tier-1, CI fail-first
+gate "Byzantine-robust sparse path").
+
+Four layers, matching the robust-consensus stack bottom-up:
+
+* ``aggregators.robust_block`` unit contracts: bitwise width-invariance
+  (the same valid rows give the SAME bits in any padded block — the
+  property the dense<->sparse parity tests lean on), padding-safety
+  (garbage in zero-weight rows is invisible), and the small-block
+  ``trimmed_mean`` clamp regression;
+* attack plumbing: ``attack_scale`` actually reaches the corruption
+  (it used to be silently dropped), data-poisoning ``poison_batch``;
+* the training-level robustness matrix at 30% Byzantine clients through
+  ``bafdp_round_sparse``: ``robust_consensus="trimmed_mean"`` keeps the
+  honest-eval loss within 2x of the attack-free run under EVERY attack,
+  while ``"none"`` demonstrably breaks — a catastrophic loss blow-up
+  under ``same_value`` and a multiple-of-the-robust-run z drift under
+  ``scaled``.  (``sign_flip`` is absorbed by construction: Eq. (20)
+  consumes each message only through a +-1 sign vote, so a 30% minority
+  of flipped votes cannot outweigh the honest majority — the unguarded
+  fold is a coordinate-wise-median-type dynamic.  The attack that DOES
+  defeat plain linear averaging under sign_flip/scaled is pinned by
+  ``test_robustness_matrix.test_fedavg_breaks``.)
+* per-delivery DP accounting: ``privacy.EpsLedger`` hand-computed
+  composition + the ``FederatedRun`` wiring over a FedBuff schedule
+  where duplicate deliveries must spend budget twice; and the
+  ``latency_lie`` schedule-level attack (arXiv 2404.14389): lying
+  clients monopolize fastest-selection/FedBuff slots.
+"""
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FedConfig, MLP_H1
+from repro.core import aggregators as agg
+from repro.core import bafdp, byzantine as byz, init_fed_state
+from repro.core.async_engine import DelayModel
+from repro.core.privacy import EpsLedger, gaussian_c3, perturb_inputs
+from repro.core.schedule import (AgeAwareSelection, FastestSelection,
+                                 FedBuffTrigger, FederatedRun, QuorumTrigger,
+                                 build_schedule)
+from repro.models.forecasting import init_forecaster, mse_loss
+
+CFG = MLP_H1
+
+
+def flat(tree):
+    return jnp.concatenate([jnp.ravel(l.astype(jnp.float32))
+                            for l in jax.tree.leaves(tree)])
+
+
+# ===========================================================================
+# robust_block unit contracts
+# ===========================================================================
+RULES = [r for r in agg.ROBUST_CONSENSUS_RULES if r != "none"]
+
+
+def _blocks_with_padding(pad, seed=0):
+    """4 fixed valid rows interleaved with ``pad`` garbage rows."""
+    rng = np.random.RandomState(seed)
+    Xv = rng.randn(4, 7).astype(np.float32)
+    R = 4 + pad
+    X = (rng.randn(R, 7) * 100).astype(np.float32)   # garbage everywhere
+    w = np.zeros((R,), np.float32)
+    pos = np.linspace(0, R - 1, 4).astype(int)
+    X[pos] = Xv
+    w[pos] = 1.0
+    return jnp.asarray(X), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_robust_block_width_invariant_bitwise(rule):
+    """The same 4 valid rows must produce BIT-identical aggregates no
+    matter how many garbage padding rows surround them — the property
+    that keeps the masked dense round and the gathered sparse round on
+    one robust consensus."""
+    z = {"a": jnp.zeros((7,), jnp.float32)}
+    outs = []
+    for pad in (0, 3, 9, 20):
+        X, w = _blocks_with_padding(pad)
+        out = agg.robust_block(rule, {"a": X}, w, z, n_byzantine=1)
+        outs.append(np.asarray(out["a"]))
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_robust_block_ignores_padding_garbage(rule):
+    """Zero-weight rows are invisible: replacing their contents with any
+    other garbage (including huge magnitudes and NaN-free extremes)
+    cannot change a single bit of the aggregate."""
+    X, w = _blocks_with_padding(6)
+    z = {"a": jnp.zeros((7,), jnp.float32)}
+    ref = agg.robust_block(rule, {"a": X}, w, z, n_byzantine=1)
+    X2 = jnp.where(w[:, None] > 0, X, -1e20 * jnp.ones_like(X))
+    out = agg.robust_block(rule, {"a": X2}, w, z, n_byzantine=1)
+    np.testing.assert_array_equal(np.asarray(ref["a"]), np.asarray(out["a"]))
+
+
+def test_robust_block_unknown_rule_raises():
+    X, w = _blocks_with_padding(0)
+    with pytest.raises(ValueError, match="robust_consensus"):
+        agg.robust_block("geomed", {"a": X}, w,
+                         {"a": jnp.zeros((7,), jnp.float32)})
+
+
+def test_robust_block_weighted_matches_fleet_rule():
+    """With all-ones weight and no padding, the block rules agree with
+    their fleet-shaped counterparts on the same stack."""
+    rng = np.random.RandomState(3)
+    X = jnp.asarray(rng.randn(9, 5).astype(np.float32))
+    w = jnp.ones((9,), jnp.float32)
+    z = {"a": jnp.zeros((5,), jnp.float32)}
+    out = agg.robust_block("median", {"a": X}, w, z)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.median(np.asarray(X), axis=0),
+                               rtol=1e-6)
+    out_tm = agg.robust_block("trimmed_mean", {"a": X}, w, z, trim_frac=0.2)
+    ref_tm = agg.trimmed_mean({"a": X}, trim_frac=0.2)
+    np.testing.assert_allclose(np.asarray(out_tm["a"]),
+                               np.asarray(ref_tm["a"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bugfix: trimmed_mean degenerated to a plain mean on small blocks
+# ---------------------------------------------------------------------------
+def test_trimmed_mean_small_block_clamps_k():
+    """C=3, trim_frac=0.2: int(C*frac) == 0 used to silently fall back to
+    a plain mean (zero robustness).  The clamp trims at least one row per
+    side whenever trimming is possible, so a single huge outlier cannot
+    drag the aggregate."""
+    s = {"w": jnp.asarray([[0.0, 1.0], [0.2, 0.9], [1e6, -1e6]])}
+    out = agg.trimmed_mean(s, trim_frac=0.2)
+    assert float(jnp.max(jnp.abs(out["w"]))) < 10.0, \
+        "outlier leaked through the trim"
+    # the trimmed value is the per-coordinate median of the 3 rows
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.median(np.asarray(s["w"]), axis=0),
+                               rtol=1e-6)
+
+
+def test_trimmed_mean_two_rows_cannot_trim():
+    """C=2 cannot trim a side and keep a row — the clamp keeps k=0
+    (plain mean) instead of producing an empty slice."""
+    s = {"w": jnp.asarray([[1.0], [3.0]])}
+    out = agg.trimmed_mean(s, trim_frac=0.4)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0], rtol=1e-6)
+
+
+def test_trimmed_mean_unchanged_on_large_fleet():
+    """The clamp is behaviour-preserving where the old code was already
+    correct (C=12, frac=0.2 -> k=2, the robustness-matrix setting)."""
+    rng = np.random.RandomState(0)
+    X = jnp.asarray(rng.randn(12, 6).astype(np.float32))
+    out = agg.trimmed_mean({"w": X}, trim_frac=0.2)
+    s = np.sort(np.asarray(X), axis=0)
+    np.testing.assert_allclose(np.asarray(out["w"]), s[2:10].mean(axis=0),
+                               rtol=1e-6)
+
+
+# ===========================================================================
+# attack plumbing: attack_scale threading + data poisoning
+# ===========================================================================
+def test_attack_scale_reaches_corruption():
+    """apply_attack used to drop corrupt()'s scale kwarg on the floor —
+    every magnitude attack ran at the hard-coded 10.0."""
+    stacked = {"w": jnp.ones((4, 3))}
+    mask = jnp.asarray([False, False, True, True])
+    key = jax.random.PRNGKey(0)
+    out2 = byz.apply_attack("sign_flip", key, stacked, mask, scale=2.0)
+    out9 = byz.apply_attack("sign_flip", key, stacked, mask, scale=9.0)
+    np.testing.assert_allclose(np.asarray(out2["w"])[2:], -2.0)
+    np.testing.assert_allclose(np.asarray(out9["w"])[2:], -9.0)
+    g2 = byz.apply_attack("gaussian", key, stacked, mask, scale=2.0)
+    g9 = byz.apply_attack("gaussian", key, stacked, mask, scale=9.0)
+    np.testing.assert_allclose(np.asarray(g9["w"])[2:],
+                               np.asarray(g2["w"])[2:] * 4.5, rtol=1e-5)
+
+
+def test_attack_scale_threads_through_sparse_round():
+    """FedConfig.attack_scale must reach the round's corruption: two
+    configs differing only in attack_scale produce different consensus
+    states (and identical ones when the attack is off)."""
+    def z_after(attack, scale):
+        fed = FedConfig(n_clients=6, active_frac=1.0, attack=attack,
+                        byzantine_frac=1 / 3, attack_scale=scale,
+                        consensus_scope="active")
+        key = jax.random.PRNGKey(0)
+        state = init_fed_state(key, lambda k: init_forecaster(k, CFG), fed)
+        X = jax.random.normal(key, (6, 4, CFG.d_x))
+        Y = jnp.sum(X[..., :3], -1, keepdims=True) * 0.5
+        c3 = gaussian_c3(CFG.d_x + CFG.d_y, fed.dp_delta,
+                         fed.dp_sensitivity)
+
+        def local_loss(p, b, k, eps):
+            x, y = b
+            return mse_loss(p, perturb_inputs(k, x, eps, 0.02), y, CFG)
+
+        out, _ = bafdp.bafdp_round_sparse(
+            state, (X, Y), key, local_loss=local_loss, fed=fed, c3=c3,
+            n_samples=100, d_dim=CFG.d_x + CFG.d_y,
+            byz_mask=byz.byz_mask(6, fed.n_byzantine),
+            idx=jnp.arange(6), weight=jnp.ones((6,)))
+        return np.asarray(flat(out.z))
+
+    # Eq. (20) consumes messages through sign(z - W) only, so the scale
+    # must cross z to be visible in one round: +2 vs -2 flips every vote
+    assert not np.array_equal(z_after("same_value", 2.0),
+                              z_after("same_value", -2.0))
+    np.testing.assert_array_equal(z_after("none", 2.0),
+                                  z_after("none", -2.0))
+
+
+def test_poison_batch_traffic_shift():
+    """traffic_shift rolls ONLY the malicious rows' windows along the
+    last axis; label_flip and message attacks leave the batch alone."""
+    x = jnp.arange(24, dtype=jnp.float32).reshape(3, 2, 4)
+    rows = jnp.asarray([False, True, False])
+    out = byz.poison_batch("traffic_shift", {"x": x}, rows, shift=1)
+    np.testing.assert_array_equal(np.asarray(out["x"])[0],
+                                  np.asarray(x)[0])
+    np.testing.assert_array_equal(np.asarray(out["x"])[2],
+                                  np.asarray(x)[2])
+    np.testing.assert_array_equal(np.asarray(out["x"])[1],
+                                  np.roll(np.asarray(x)[1], 1, axis=-1))
+    for attack in ("none", "label_flip", "gaussian", "sign_flip"):
+        same = byz.poison_batch(attack, {"x": x}, rows, shift=1)
+        np.testing.assert_array_equal(np.asarray(same["x"]), np.asarray(x))
+    # message-level corrupt() is the identity for data attacks
+    for attack in byz.DATA_ATTACKS:
+        out = byz.corrupt(attack, jax.random.PRNGKey(0), {"x": x})
+        np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(x))
+
+
+# ===========================================================================
+# training-level robustness matrix on the sparse path (30% Byzantine)
+# ===========================================================================
+TRAIN_C = 10
+TRAIN_ROUNDS = 40
+# empirically measured at (psi=1.0, alpha_z=0.1, trim=0.45, T=40):
+#   trimmed_mean loss ratios <= 1.21x across ATTACKS (bound 2.0)
+#   none under same_value: ~1e10x (bound 100)
+#   none z-drift under scaled: ~29 vs trimmed_mean ~8.7 (contrast 3.4x)
+ROBUST_LOSS_FACTOR = 2.0
+BREAK_LOSS_FACTOR = 100.0
+SCALED_DRIFT_CONTRAST = 2.0
+
+
+@functools.lru_cache(maxsize=None)
+def _train_sparse(attack, rule):
+    """T rounds of bafdp_round_sparse at full participation, 30% Byzantine,
+    strong consensus coupling (psi=1.0) so a corrupted z is visible in the
+    honest-eval loss.  Returns (final z flat, honest-eval loss)."""
+    fed = FedConfig(n_clients=TRAIN_C, active_frac=1.0, attack=attack,
+                    byzantine_frac=0.3, robust_consensus=rule,
+                    robust_trim_frac=0.45, consensus_scope="active",
+                    psi=1.0, alpha_z=0.1)
+    key = jax.random.PRNGKey(0)
+    state = init_fed_state(key, lambda k: init_forecaster(k, CFG), fed)
+    X = jax.random.normal(key, (TRAIN_C, 8, CFG.d_x))
+    Y = jnp.sum(X[..., :3], -1, keepdims=True) * 0.5
+    c3 = gaussian_c3(CFG.d_x + CFG.d_y, fed.dp_delta, fed.dp_sensitivity)
+
+    def local_loss(p, b, k, eps):
+        x, y = b
+        return mse_loss(p, perturb_inputs(k, x, eps, 0.02), y, CFG)
+
+    mask = byz.byz_mask(TRAIN_C, fed.n_byzantine)
+    step = jax.jit(functools.partial(
+        bafdp.bafdp_round_sparse, local_loss=local_loss, fed=fed, c3=c3,
+        n_samples=200, d_dim=CFG.d_x + CFG.d_y, byz_mask=mask))
+    idx = jnp.arange(TRAIN_C, dtype=jnp.int32)
+    w = jnp.ones((TRAIN_C,), jnp.float32)
+    for t in range(TRAIN_ROUNDS):
+        state, _ = step(state, (X, Y), jax.random.fold_in(key, t),
+                        idx=idx, weight=w)
+    honest = np.flatnonzero(~np.asarray(mask))
+    Xh = X[honest].reshape(-1, CFG.d_x)
+    Yh = Y[honest].reshape(-1, 1)
+    return (np.asarray(flat(state.z)),
+            float(mse_loss(state.z, Xh, Yh, CFG)))
+
+
+@pytest.mark.parametrize("attack", byz.ATTACKS)
+def test_trimmed_mean_bounded_under_every_attack_sparse(attack):
+    """robust_consensus='trimmed_mean' at 30% Byzantine: honest-eval loss
+    stays within 2x of the attack-free run for EVERY attack in ATTACKS
+    (measured worst case 1.21x, under same_value)."""
+    _, free = _train_sparse("none", "trimmed_mean")
+    _, attacked = _train_sparse(attack, "trimmed_mean")
+    assert np.isfinite(attacked), f"trimmed_mean diverged under {attack}"
+    assert attacked <= ROBUST_LOSS_FACTOR * free, \
+        f"trimmed_mean under {attack}: {attacked:.4f} vs free {free:.4f}"
+
+
+def test_unguarded_consensus_breaks_under_same_value():
+    """robust_consensus='none' demonstrably breaks: the coherent
+    same_value push compounds through the client-consensus coupling into
+    a runaway (measured ~1e10x the attack-free loss; NaN at other
+    hyper-parameters counts as broken too)."""
+    _, free = _train_sparse("none", "none")
+    _, attacked = _train_sparse("same_value", "none")
+    assert not (attacked <= BREAK_LOSS_FACTOR * free), \
+        f"expected a blow-up, got {attacked:.4f} vs free {free:.4f}"
+
+
+def test_unguarded_consensus_dragged_under_scaled():
+    """Under 'scaled', the unguarded fold's final consensus is dragged
+    several times further from its attack-free trajectory than the
+    trimmed-mean run is from its own — the robust rule visibly shrinks
+    the attacker's influence on z (the sign fold caps the magnitude, so
+    the break shows in z drift rather than a loss blow-up)."""
+    z_free_none, _ = _train_sparse("none", "none")
+    z_atk_none, _ = _train_sparse("scaled", "none")
+    z_free_tm, _ = _train_sparse("none", "trimmed_mean")
+    z_atk_tm, _ = _train_sparse("scaled", "trimmed_mean")
+    drift_none = np.linalg.norm(z_atk_none - z_free_none)
+    drift_tm = np.linalg.norm(z_atk_tm - z_free_tm)
+    assert drift_none > SCALED_DRIFT_CONTRAST * drift_tm, \
+        f"drift none={drift_none:.2f} vs trimmed_mean={drift_tm:.2f}"
+
+
+def test_sign_flip_absorbed_by_sign_fold():
+    """sign_flip cannot break Eq. (20) at 30% Byzantine BY CONSTRUCTION:
+    each message enters only as a +-1 vote, so flipped votes are a
+    bounded minority — both the unguarded and the robust run stay within
+    the robust envelope.  (Linear averaging DOES break under sign_flip;
+    that contrast lives in test_robustness_matrix.test_fedavg_breaks.)"""
+    for rule in ("none", "trimmed_mean"):
+        _, free = _train_sparse("none", rule)
+        _, attacked = _train_sparse("sign_flip", rule)
+        assert attacked <= ROBUST_LOSS_FACTOR * free, \
+            f"{rule} under sign_flip: {attacked:.4f} vs {free:.4f}"
+
+
+# ===========================================================================
+# EpsLedger: per-delivery DP accounting
+# ===========================================================================
+def test_eps_ledger_hand_computed_composition():
+    led = EpsLedger(3)
+    led.record([0, 1, 0], [0.5, 0.2, 0.5])
+    led.record([0], [0.5])
+    # client 0: three deliveries of eps=0.5; client 1: one of 0.2
+    np.testing.assert_allclose(led.basic(), [1.5, 0.2, 0.0])
+    np.testing.assert_array_equal(led.deliveries, [3, 1, 0])
+    delta = 1e-5
+    adv0 = math.sqrt(2 * 3 * math.log(1 / delta)) * 0.5 \
+        + 3 * 0.5 * (math.e ** 0.5 - 1)
+    # large per-delivery eps: basic wins the min
+    assert adv0 > 1.5
+    np.testing.assert_allclose(led.advanced(delta),
+                               [1.5, 0.2, 0.0], rtol=1e-12)
+    tot = led.totals(delta)
+    assert tot["dp_eps_basic"] == pytest.approx(1.5)
+    assert tot["dp_deliveries"] == 4
+    assert tot["dp_deliveries_max"] == 3
+
+
+def test_eps_ledger_advanced_wins_for_many_small_deliveries():
+    led = EpsLedger(1)
+    for _ in range(1000):
+        led.record([0], [0.01])
+    delta = 1e-5
+    basic = led.basic()[0]
+    adv = led.advanced(delta)[0]
+    expect = math.sqrt(2 * 1000 * math.log(1 / delta)) * 0.01 \
+        + 1000 * 0.01 * (math.e ** 0.01 - 1)
+    assert basic == pytest.approx(10.0)
+    assert adv == pytest.approx(expect, rel=1e-9)
+    assert adv < basic
+
+
+def test_eps_ledger_validation():
+    led = EpsLedger(2)
+    with pytest.raises(ValueError, match="range"):
+        led.record([2], [0.1])
+    with pytest.raises(ValueError, match="range"):
+        led.record([-1], [0.1])
+    with pytest.raises(ValueError):
+        led.record([0, 1], [0.1])
+    with pytest.raises(ValueError):
+        EpsLedger(0)
+    led.record([], [])          # no-op, not an error
+
+
+class _EpsState:
+    """Toy state carrying a fixed per-client eps vector."""
+
+    def __init__(self, eps):
+        self.eps = np.asarray(eps, np.float64)
+
+
+def test_federated_run_ledger_counts_duplicate_deliveries():
+    """Over a FedBuff schedule with duplicate deliveries, the ledger's
+    totals must count every delivery — strictly more than the number of
+    distinct (round, client) participations — and match the
+    hand-computed spend eps_i * deliveries_i."""
+    C = 4
+    dm = DelayModel(n_clients=C, hetero=2.5, seed=3)
+    sched = build_schedule(6, dm, FedBuffTrigger(buffer_k=3))
+    ids = np.asarray(sched.winner_ids)
+    # precondition: the heterogeneous fleet actually produced a duplicate
+    # (same client twice within one admission round)
+    dup_rounds = 0
+    for r in range(sched.n_rounds):
+        row = ids[sched.offsets[r]:sched.offsets[r + 1]]
+        dup_rounds += int(len(row) != len(set(row.tolist())))
+    assert dup_rounds > 0, "schedule has no duplicate deliveries; " \
+        "pick a more heterogeneous DelayModel"
+
+    eps = np.asarray([0.1, 0.2, 0.3, 0.4])
+    led = EpsLedger(C)
+    run = FederatedRun(step=lambda s, b, k, **kw: (s, {"loss": 0.0}),
+                       rounds=sched.n_rounds, schedule=sched,
+                       round_impl="sparse", n_clients=C, ledger=led)
+    _, hist = run.run(_EpsState(eps), lambda t: None, jax.random.PRNGKey(0))
+
+    counts = np.bincount(ids, minlength=C)
+    distinct = len({(r, int(c)) for r in range(sched.n_rounds)
+                    for c in ids[sched.offsets[r]:sched.offsets[r + 1]]})
+    assert int(led.deliveries.sum()) == ids.size > distinct
+    np.testing.assert_array_equal(led.deliveries, counts)
+    np.testing.assert_allclose(led.basic(), eps * counts, rtol=1e-12)
+    tot = led.totals(1e-5)
+    assert tot["dp_eps_basic"] == pytest.approx(float(np.max(eps * counts)))
+    # the run history carries running worst-client curves
+    assert len(hist["dp_eps_basic"]) == sched.n_rounds
+    assert hist["dp_eps_basic"][-1] == pytest.approx(tot["dp_eps_basic"])
+    assert np.all(np.diff(hist["dp_eps_basic"]) >= 0)
+    assert np.all(np.asarray(hist["dp_eps_adv"])
+                  <= np.asarray(hist["dp_eps_basic"]) + 1e-12)
+
+
+def test_federated_run_ledger_requires_schedule_and_eps():
+    led = EpsLedger(4)
+    with pytest.raises(ValueError, match="schedule"):
+        FederatedRun(step=lambda s, b, k, **kw: (s, {}), rounds=2,
+                     ledger=led).run([], lambda t: None,
+                                     jax.random.PRNGKey(0))
+    dm = DelayModel(n_clients=4, seed=0)
+    sched = build_schedule(2, dm, QuorumTrigger(s_target=2))
+    with pytest.raises(ValueError, match="eps"):
+        FederatedRun(step=lambda s, b, k, **kw: (s, {}), rounds=2,
+                     schedule=sched, round_impl="sparse",
+                     ledger=led).run([], lambda t: None,
+                                     jax.random.PRNGKey(0))
+
+
+def test_federated_run_ledger_dense_rows():
+    """The dense round path charges every active client once per round."""
+    C = 5
+    dm = DelayModel(n_clients=C, seed=1)
+    sched = build_schedule(4, dm, QuorumTrigger(s_target=2))
+    led = EpsLedger(C)
+    run = FederatedRun(step=lambda s, b, k, **kw: (s, {"loss": 0.0}),
+                       rounds=4, schedule=sched, n_clients=C, ledger=led)
+    run.run(_EpsState(np.full(C, 0.25)), lambda t: None,
+            jax.random.PRNGKey(0))
+    acts = np.stack([a for a, _ in sched.rows()])
+    np.testing.assert_array_equal(led.deliveries, acts.sum(axis=0))
+    np.testing.assert_allclose(led.basic(), 0.25 * acts.sum(axis=0))
+
+
+# ===========================================================================
+# latency_lie: the schedule-level adaptive attack
+# ===========================================================================
+def test_liar_mask_and_lie_row():
+    dm = DelayModel(n_clients=10, liar_frac=0.3, lie_scale=1e-3)
+    np.testing.assert_array_equal(dm.liar_mask(),
+                                  np.arange(10) >= 7)
+    row = np.ones(10)
+    lied = dm.lie_row(row)
+    np.testing.assert_allclose(lied[:7], 1.0)
+    np.testing.assert_allclose(lied[7:], 1e-3)
+    # draw-free no-op at liar_frac=0 (pinned schedule digests depend on it)
+    dm0 = DelayModel(n_clients=10)
+    assert dm0.lie_row(row) is row
+
+
+def test_round_delays_apply_lie_and_match_stream():
+    """The dense matrix builder and the streaming row provider must apply
+    the SAME lie: liar columns scaled by lie_scale, honest untouched."""
+    from repro.core.schedule import _StreamRows
+    kw = dict(n_clients=6, hetero=1.0, seed=5, liar_frac=0.5,
+              lie_scale=1e-4)
+    dm = DelayModel(**kw)
+    honest_dm = DelayModel(**{**kw, "liar_frac": 0.0})
+    d = dm.round_delays(4)
+    d0 = honest_dm.round_delays(4)
+    np.testing.assert_allclose(d[:, :3], d0[:, :3])
+    np.testing.assert_allclose(d[:, 3:], d0[:, 3:] * 1e-4)
+    stream = _StreamRows(dm, 4)
+    for r in range(4):
+        np.testing.assert_allclose(stream.delays(r), d[r])
+
+
+@pytest.mark.parametrize("trigger", ["fastest", "fedbuff"])
+def test_latency_liars_monopolize_selection(trigger):
+    """Byzantine clients reporting near-zero latency win nearly every
+    fastest-selection / FedBuff slot — far above their 30% population
+    share (this is what makes latency_lie + message corruption potent:
+    the attacker first rigs WHO aggregates)."""
+    C, rounds = 10, 30
+    dm = DelayModel(n_clients=C, hetero=0.5, seed=7, liar_frac=0.3,
+                    lie_scale=1e-3)
+    trig = FedBuffTrigger(buffer_k=3) if trigger == "fedbuff" else \
+        QuorumTrigger(s_target=3, selection=FastestSelection())
+    sched = build_schedule(rounds, dm, trig)
+    ids = np.asarray(sched.winner_ids)
+    liar_share = float(np.mean(ids >= 7))
+    assert liar_share > 0.9, \
+        f"liars won only {liar_share:.0%} of the slots"
+    # without the lie the same fleet spreads the wins
+    honest = build_schedule(rounds, DelayModel(n_clients=C, hetero=0.5,
+                                               seed=7), trig)
+    honest_share = float(np.mean(np.asarray(honest.winner_ids) >= 7))
+    assert honest_share < 0.7
+
+
+def test_age_aware_selection_bounds_liar_monopoly():
+    """AgeAwareSelection admits over-age clients first, so honest clients
+    keep participating even when liars rig the completion order — the
+    schedule-level defense the policy API already ships."""
+    C, rounds = 10, 40
+    dm = DelayModel(n_clients=C, hetero=0.5, seed=7, liar_frac=0.3,
+                    lie_scale=1e-3)
+    sched = build_schedule(
+        rounds, dm, QuorumTrigger(s_target=3,
+                                  selection=AgeAwareSelection()))
+    ids = np.asarray(sched.winner_ids)
+    # every honest client still gets admitted regularly
+    honest_ids, honest_counts = np.unique(ids[ids < 7],
+                                          return_counts=True)
+    assert set(honest_ids.tolist()) == set(range(7))
+    assert honest_counts.min() >= rounds // 20
+    liar_share = float(np.mean(ids >= 7))
+    assert liar_share < 0.75

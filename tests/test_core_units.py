@@ -101,7 +101,8 @@ def _stacked(C=6, D=8, seed=0):
 
 
 @pytest.mark.parametrize("attack", [a for a in byz.ATTACKS
-                                    if a not in ("none", "label_flip")])
+                                    if a != "none"
+                                    and a not in byz.DATA_ATTACKS])
 def test_attack_corrupts_only_masked(attack):
     stacked = _stacked()
     mask = jnp.array([False, False, True, False, True, False])

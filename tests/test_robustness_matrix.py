@@ -28,8 +28,9 @@ B = 2               # byzantine (<= trimmed_mean's per-side trim of 0.2*C)
 SIGMA = 0.1         # honest spread around the consensus
 ROBUST_BOUND = 1.0  # L2 distance every robust rule must stay within
                     # (measured worst case across the matrix: ~0.40)
-BREAK_FACTOR = 4.0  # fedavg must exceed ROBUST_BOUND by this much
-                    # (measured: ~5.1 under gaussian, ~11.0 under scaled)
+BREAK_FACTOR = 3.0  # fedavg must exceed ROBUST_BOUND by this much
+                    # (measured with fleet-indexed attack RNG: ~3.5 under
+                    # gaussian, ~11.0 under scaled)
 
 
 def honest_updates(seed=0):

@@ -18,6 +18,9 @@ oracle: this suite pins
   ``FederatedRun(round_impl="sparse")`` wiring,
 * the gathered-block sharding specs,
 * the init_fed_state comp-dtype bugfix (bf16 models),
+* bit-parity under EVERY Byzantine attack (fleet-indexed RNG: gaussian
+  draws and alie statistics used to be the documented dense<->sparse
+  exclusion) and under every ``robust_consensus`` rule,
 * the C=1_000_000 round smoke: one jitted ``bafdp_round_sparse`` step
   completes with no dense (C, D) intermediate in the jaxpr.
 """
@@ -31,7 +34,9 @@ import pytest
 
 from conftest import given, settings, st   # hypothesis or graceful-skip stubs
 from repro.configs import FedConfig, MLP_H1
+from repro.core import aggregators as agg_lib
 from repro.core import bafdp, init_fed_state
+from repro.core import byzantine as byz_lib
 from repro.core.byzantine import byz_mask
 from repro.core.privacy import gaussian_c3, perturb_inputs
 from repro.models.forecasting import init_forecaster, mse_loss
@@ -195,6 +200,86 @@ def test_scope_all_unchanged_by_this_pr():
     z_all = np.asarray(jax.tree.leaves(out_all.z)[0])
     z_act = np.asarray(jax.tree.leaves(out_act.z)[0])
     assert not np.array_equal(z_all, z_act)
+
+
+# ---------------------------------------------------------------------------
+# Byzantine attack parity: every attack, including the randomized ones
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("attack",
+                         [a for a in byz_lib.ATTACKS if a != "none"])
+def test_dense_sparse_bit_parity_under_attack(attack):
+    """Fleet-indexed attack RNG: gaussian draws key off (key, leaf, client
+    id) and alie's cross-client statistics are weight-masked, so EVERY
+    attack — not just the deterministic ones — is bit-identical between
+    the masked dense round and the gathered sparse round.  (Before this,
+    gaussian/alie drew over the block and were the documented exclusion.)"""
+    fed = FedConfig(n_clients=C, active_frac=0.5, attack=attack,
+                    byzantine_frac=1 / 3, attack_scale=3.0,
+                    staleness_decay="poly", staleness_compensation="taylor")
+    state, batch, dense, sparse, key = make_problem(fed)
+    rng = np.random.RandomState(11)
+    sd = sa = state
+    for t in range(3):
+        mask, ages, (idx, stale, weight) = draw_round(rng)
+        # make sure a Byzantine client participates (the last 2 are
+        # malicious under byz_mask's convention)
+        mask[C - 1] = True
+        i = np.flatnonzero(mask)[:SMAX]
+        mask = np.zeros(C, bool)
+        mask[i] = True
+        ages = rng.randint(0, 6, i.size)
+        idx = np.full(SMAX, C, np.int32)
+        stale = np.zeros(SMAX, np.float32)
+        weight = np.zeros(SMAX, np.float32)
+        perm = rng.permutation(i.size)
+        idx[:i.size] = i[perm]
+        stale[:i.size] = ages[perm]
+        weight[:i.size] = 1.0
+        act, stale_c = densify(mask, ages)
+        kt = jax.random.fold_in(key, t)
+        sd, _ = dense(sd, batch, kt, act=act, stale=stale_c)
+        sa, ms = sparse(sa, batch, kt, idx=jnp.asarray(idx),
+                        stale=jnp.asarray(stale),
+                        weight=jnp.asarray(weight))
+        assert_states_equal(sd, sa, f"attack {attack} round {t}")
+    assert np.isfinite(float(ms["loss"]))
+
+
+@pytest.mark.parametrize("rule",
+                         [r for r in agg_lib.ROBUST_CONSENSUS_RULES
+                          if r != "none"])
+@pytest.mark.parametrize("attack", ["gaussian", "sign_flip"])
+def test_dense_sparse_bit_parity_robust_consensus(rule, attack):
+    """robust_consensus runs through the one shared code path: the robust
+    pre-aggregate is computed from weight-masked block statistics, so the
+    masked dense round and the gathered sparse round stay bit-identical
+    for every rule."""
+    fed = FedConfig(n_clients=C, active_frac=0.5, attack=attack,
+                    byzantine_frac=1 / 3, robust_consensus=rule,
+                    staleness_decay="hinge")
+    state, batch, dense, sparse, key = make_problem(fed)
+    rng = np.random.RandomState(23)
+    sd = sa = state
+    for t in range(2):
+        mask, ages, (idx, stale, weight) = draw_round(rng)
+        act, stale_c = densify(mask, ages)
+        kt = jax.random.fold_in(key, t)
+        sd, _ = dense(sd, batch, kt, act=act, stale=stale_c)
+        sa, ms = sparse(sa, batch, kt, idx=jnp.asarray(idx),
+                        stale=jnp.asarray(stale),
+                        weight=jnp.asarray(weight))
+        assert_states_equal(sd, sa, f"{rule} under {attack} round {t}")
+    assert np.isfinite(float(ms["loss"]))
+
+
+def test_robust_consensus_unknown_rule_raises():
+    fed = FedConfig(n_clients=C, active_frac=0.5,
+                    robust_consensus="geometric_median")
+    state, batch, dense, sparse, key = make_problem(fed)
+    with pytest.raises(ValueError, match="robust_consensus"):
+        sparse(state, batch, key, idx=jnp.arange(C - 1))
+    with pytest.raises(ValueError, match="robust_consensus"):
+        dense(state, batch, key, act=jnp.ones(C, bool))
 
 
 # ---------------------------------------------------------------------------
