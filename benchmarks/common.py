@@ -185,7 +185,8 @@ def train_bafdp(dataset: str, horizon: int, fed: FedConfig,
 
     def local_loss(p, batch, k, eps):
         x, y = batch
-        return mse_loss(p, perturb_inputs(k, x, eps, input_sigma), y, cfg)
+        return mse_loss(p, perturb_inputs(k, x, eps, input_sigma,
+                                          fed.eps_min), y, cfg)
 
     state = init_fed_state(key, lambda k: init_forecaster(k, cfg), fed)
     round_fn = bafdp.bafdp_round_sparse if round_impl == "sparse" \

@@ -58,6 +58,10 @@ def main(rounds: int = 0, quick: bool = False) -> List[str]:
     f = jax.jit(lambda z, q, s, p: ref.sign_agg_int8_ref(
         z, q, s, p, 0.01, 0.01))
     us = _time(f, z, payload, sw, phi)
+    # this dense row runs consensus_scope="all": every one of the C
+    # clients' messages crosses the wire, so fleet-wide accounting is the
+    # right accounting HERE (the sparse-round rows below report the
+    # active-subset bytes a sparse round actually moves)
     wire_f32 = sum(message_bytes(C, D, "f32"))
     wire_i8 = sum(message_bytes(C, D, "int8"))
     bytes_f32 = wire_f32 + 2 * D * 4            # + z read, z' write
@@ -96,6 +100,57 @@ def main(rounds: int = 0, quick: bool = False) -> List[str]:
                 f"byte_ratio={bytes_dense / bytes_sparse:.0f};"
                 f"tpu_roofline_us_dense={tpu_dense_us:.2f};"
                 f"tpu_roofline_us_sparse={tpu_sparse_us:.3f}")
+
+    # sign-wire bytes, fleet-wide vs active-subset: an active-scope /
+    # sparse round moves only S_max messages, so fleet-wide
+    # message_bytes(C, ...) overstates its wire cost by C/S — both
+    # accountings are reported, and the sparse rows below reuse the
+    # active-subset one
+    sw_fleet_f32 = sum(message_bytes(Cs, Ds, "f32"))
+    sw_fleet_i8 = sum(message_bytes(Cs, Ds, "int8"))
+    sw_act_f32 = sum(message_bytes(Ss, Ds, "f32"))
+    sw_act_i8 = sum(message_bytes(Ss, Ds, "int8"))
+    rows.append(f"kernel/sign_wire_bytes_C{Cs}_S{Ss}_D{Ds},0.0,"
+                f"fleet_f32={sw_fleet_f32};fleet_int8={sw_fleet_i8};"
+                f"active_f32={sw_act_f32};active_int8={sw_act_i8};"
+                f"active_ratio={sw_act_f32 / sw_act_i8:.2f};"
+                f"fleet_overstatement={sw_fleet_f32 / sw_act_f32:.0f}")
+
+    # Eq. (22) dual wire: f32 vs absmax-int8 uploads, active-subset
+    # accounting (S_max dual messages cross the wire per sparse round).
+    # Byte-bound op, so the wire ratio IS the projected TPU speedup on
+    # the dominant term.
+    from repro.distributed.collectives import dual_message_bytes
+    phi_rows = jax.random.normal(jax.random.PRNGKey(1), (Ss, Ds))
+    w_act = jnp.ones((Ss,))
+    f_dual_f32 = jax.jit(lambda p, w: ref.fold_weighted_rowsum(p, w))
+    us_dual_f32 = _time(f_dual_f32, phi_rows, w_act)
+    f_dual_i8 = jax.jit(lambda p, w: ref.fold_dual_rowsum(p, w))
+    us_dual_i8 = _time(f_dual_i8, phi_rows, w_act)
+    dw_f32 = sum(dual_message_bytes(Ss, Ds, "f32"))
+    dw_i8 = sum(dual_message_bytes(Ss, Ds, "int8"))
+    rows.append(f"kernel/dual_wire_S{Ss}_D{Ds},{us_dual_i8:.1f},"
+                f"f32_us={us_dual_f32:.1f};"
+                f"dual_bytes_f32={dw_f32};dual_bytes_int8={dw_i8};"
+                f"dual_wire_ratio={dw_f32 / dw_i8:.2f}")
+
+    # streamed vs materialized consensus fold: the chunked arrival-event
+    # fold (bit-identical left-fold) holds one (chunk, D) message block
+    # at a time instead of the full (S_max, D)
+    chunk = 8
+    f_mat = jax.jit(lambda z, W, p, w: ref.sign_agg_fold_ref(
+        z, W, p, w, 0.01, 0.01, Cs))
+    us_mat = _time(f_mat, zc, Wc[gidx], phic, jnp.ones((Ss,)))
+    f_str = jax.jit(lambda z, W, p, w: ref.sign_agg_fold_stream_ref(
+        z, W, p, w, 0.01, 0.01, Cs, chunk))
+    us_str = _time(f_str, zc, Wc[gidx], phic, jnp.ones((Ss,)))
+    blk_mat = Ss * Ds * 4
+    blk_str = chunk * Ds * 4
+    rows.append(f"kernel/streamed_fold_S{Ss}_D{Ds}_chunk{chunk},"
+                f"{us_str:.1f},materialized_us={us_mat:.1f};"
+                f"peak_block_bytes_materialized={blk_mat};"
+                f"peak_block_bytes_streamed={blk_str};"
+                f"block_ratio={blk_mat / blk_str:.0f}")
 
     # flash attention fwd
     B, S, H, Dh = (2, 1024, 8, 64) if not quick else (1, 256, 4, 64)

@@ -305,6 +305,38 @@ class FedConfig:
     # existing configs/variants keep working.  resolved_sign_message merges
     # the two.
     compress_signs: bool = False
+    # wire format of the Eq. (22) dual message (the phi_i uploads the
+    # server averages into the Eq. (20) step):
+    #   f32:  4 bytes per coordinate, bit-compatible default
+    #   int8: deterministic per-client absmax quantizer — payload
+    #         round(phi / s) in [-127, 127] with ONE f32 scale
+    #         s = absmax/127 per client.  Unlike the sign message the dual
+    #         is NOT ternary, so this format is lossy: per-coordinate error
+    #         is bounded by absmax * DUAL_INT8_REL_ERR (see
+    #         distributed/collectives), a pinned tolerance rather than
+    #         bit-exactness.  The quantizer is row-local, so dense<->sparse
+    #         parity is preserved exactly (both paths decode the same
+    #         per-client values before the order-canonical fold).
+    dual_message: str = "f32"      # f32 | int8
+    # streaming consensus fold (the FedBuff arrival-event shape): when on,
+    # the active-scope Eq. (20)/(22) reductions run as a chunk-bounded
+    # online left-fold (lax.scan over arrival-event chunks of
+    # consensus_chunk rows) instead of materializing the full (S_max, D)
+    # message block.  Bit-identical to the materialized fold by
+    # construction — same row order, and a chunk boundary never changes a
+    # left-fold's additions.  Requires consensus_scope="active" (the "all"
+    # scope reduces by mean, not by the order-canonical fold).
+    consensus_streaming: bool = False
+    consensus_chunk: int = 8       # rows per streamed chunk (>= 1)
+
+    @property
+    def resolved_dual_message(self) -> str:
+        """Validated Eq. (22) dual wire format (no deprecated alias)."""
+        if self.dual_message not in ("f32", "int8"):
+            raise ValueError(
+                f"unknown dual_message: {self.dual_message!r} "
+                "(expected 'f32' or 'int8')")
+        return self.dual_message
 
     @property
     def resolved_sign_message(self) -> str:

@@ -58,6 +58,7 @@ from repro.core import dro
 from repro.core.fed_state import (FedState, consensus_gap, gather_clients,
                                   scatter_clients)
 from repro.core.privacy import eps_feasible, sigma_for_eps
+from repro.distributed import collectives
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -324,6 +325,7 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     then follow the sparse round's block semantics).
     """
     sign_message = fed.resolved_sign_message      # validates the knob
+    dual_message = fed.resolved_dual_message      # validates the knob
     if fed.staleness_compensation not in ("none", "taylor"):
         raise ValueError(
             f"unknown staleness_compensation: {fed.staleness_compensation!r}")
@@ -331,6 +333,10 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
         raise ValueError(
             f"unknown consensus_scope: {fed.consensus_scope!r} "
             "(expected 'all' or 'active')")
+    if fed.consensus_streaming and fed.consensus_scope != "active":
+        raise ValueError(
+            "consensus_streaming streams the active-scope left-fold; the "
+            "'all' scope reduces by mean — set consensus_scope='active'")
     if fed.robust_consensus not in agg_lib.ROBUST_CONSENSUS_RULES:
         raise ValueError(
             f"unknown robust_consensus: {fed.robust_consensus!r} "
@@ -485,7 +491,14 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
 
     def z_step(z_l, w_l, phi_l):
         zf = z_l.ravel()
-        phi_m = jnp.mean(phi_l.astype(jnp.float32), axis=0).ravel()
+        if dual_message == "int8":
+            # the server averages the DECODED dual uploads — all-scope
+            # reduction, so a plain mean over the dequantized rows
+            dec = collectives.decode_dual_message(
+                collectives.encode_dual_message(phi_l.reshape(C, -1)))
+            phi_m = jnp.mean(dec, axis=0)
+        else:
+            phi_m = jnp.mean(phi_l.astype(jnp.float32), axis=0).ravel()
         z_upd = kops.sign_consensus(zf, w_l.reshape(C, -1), phi_m,
                                     z_weights, fed.psi, fed.alpha_z,
                                     message=sign_message)
@@ -630,11 +643,21 @@ def bafdp_round_sparse(state: FedState, batch: Any, key, *,
     feed pre-gathered blocks on a fleet where S_max could equal C).
     Metrics are computed over the delivered block (``loss``,
     ``data_loss``, ``eps_mean``, ``lambda_mean``, ``n_active`` match the
-    dense round bit-for-bit / to float tolerance; ``lipschitz``,
-    ``consensus_gap``, ``staleness_mean`` and ``compensation_norm`` are
-    subset statistics — the fleet-wide versions are O(C D)).
+    dense round bit-for-bit / to float tolerance).  Statistics whose
+    fleet-wide versions would be O(C D) are reported as block statistics
+    under explicitly suffixed keys — ``lipschitz_block``,
+    ``consensus_gap_block``, ``staleness_mean_block``,
+    ``staleness_weight_mean_block``, ``compensation_norm_block`` — with
+    the realized divisor in ``metrics_k`` (``max(sum(weight), 1)``,
+    duplicate deliveries included), so a sparse history can never be
+    silently compared against the dense "all"-scope round's fleet-wide
+    keys of the same name.
     """
     sign_message = fed.resolved_sign_message      # validates the knob
+    dual_message = fed.resolved_dual_message      # validates the knob
+    if fed.consensus_streaming and fed.consensus_chunk < 1:
+        raise ValueError(
+            f"consensus_chunk must be >= 1, got {fed.consensus_chunk}")
     if fed.staleness_compensation not in ("none", "taylor"):
         raise ValueError(
             f"unknown staleness_compensation: {fed.staleness_compensation!r}")
@@ -776,15 +799,16 @@ def bafdp_round_sparse(state: FedState, batch: Any, key, *,
         metrics = {
             "loss": jnp.sum(loss_i * w_row) / wsum_act,
             "data_loss": jnp.sum(g_i * w_row) / wsum_act,
-            "lipschitz": jnp.sum(G_i * w_row) / wsum_act,
+            "lipschitz_block": jnp.sum(G_i * w_row) / wsum_act,
             "eps_mean": jnp.mean(eps_new),
             "lambda_mean": jnp.mean(lam_new),
-            "consensus_gap": jnp.zeros(()),
+            "consensus_gap_block": jnp.zeros(()),
             "n_active": jnp.sum(w_row),
-            "staleness_mean": jnp.sum(stale_v * w_row) / wsum_act,
-            "staleness_weight_mean": jnp.sum(
+            "staleness_mean_block": jnp.sum(stale_v * w_row) / wsum_act,
+            "staleness_weight_mean_block": jnp.sum(
                 staleness_weights(stale_v, fed) * w_row) / wsum_act,
-            "compensation_norm": jnp.zeros(()),
+            "compensation_norm_block": jnp.zeros(()),
+            "metrics_k": wsum_act,
         }
         return new_state, metrics
 
@@ -802,11 +826,18 @@ def bafdp_round_sparse(state: FedState, batch: Any, key, *,
     W_srv = W_sent
     if taylor:
         W_srv = compensate_stale(W_sent, comp_blocks, stale_v, fed)
-        num = sum(jnp.sum(jnp.abs(a - b.astype(jnp.float32)))
-                  for a, b in zip(jax.tree.leaves(W_srv),
-                                  jax.tree.leaves(W_sent)))
-        den = float(sum(l.size for l in jax.tree.leaves(W_sent)))
-        comp_norm = jnp.where(do_consensus, num / max(den, 1.0), 0.0)
+        # delivered-weighted per-element movement: padding / zero-weight
+        # rows drop out, so the statistic is block-width-invariant — the
+        # full-width masked block and the gathered block report the same
+        # value (the dense "all" scope keeps its fleet-wide formula)
+        per_row = jnp.zeros((S,), jnp.float32)
+        for a, b in zip(jax.tree.leaves(W_srv), jax.tree.leaves(W_sent)):
+            per_row = per_row + jnp.sum(
+                jnp.abs(a - b.astype(jnp.float32)).reshape(S, -1), axis=1)
+        den = float(sum(l.size for l in jax.tree.leaves(W_sent))) / S
+        comp_norm = jnp.where(
+            do_consensus,
+            jnp.sum(per_row * w_row) / (wsum_act * max(den, 1.0)), 0.0)
 
     # Byzantine-robust pre-aggregation over the S delivered messages
     # (weight-aware: padding rows are invisible to the robust statistics)
@@ -820,14 +851,30 @@ def bafdp_round_sparse(state: FedState, batch: Any, key, *,
             else jnp.asarray(arrivals).astype(jnp.float32)
         lr_scale = k_arr / C
 
+    # streamed folds consume chunk-bounded arrival-event blocks; 0 keeps
+    # the materialized (bit-identical) single-pass fold
+    chunk = fed.consensus_chunk if fed.consensus_streaming else 0
+
     def z_step(z_l, w_l, phi_l):
         zf = z_l.ravel()
         # dual term over the consumed messages: sum_j w_j phi_j / C, the
-        # same left-fold the active-scope dense round runs over C rows
-        phi_m = kref.fold_weighted_rowsum(phi_l.reshape(S, -1), w_row) / C
+        # same left-fold the active-scope dense round runs over C rows.
+        # dual_message="int8" folds the DECODED absmax-quantized uploads
+        # (row-local quantizer — dense<->sparse parity is preserved).
+        if dual_message == "int8":
+            phi_m = kref.fold_dual_rowsum(phi_l.reshape(S, -1), w_row,
+                                          chunk_size=chunk) / C
+        elif chunk:
+            phi_m = kref.fold_weighted_rowsum_stream(
+                phi_l.reshape(S, -1), w_row, chunk) / C
+        else:
+            phi_m = kref.fold_weighted_rowsum(phi_l.reshape(S, -1),
+                                              w_row) / C
         z_upd = kops.sign_consensus(zf, w_l.reshape(S, -1), phi_m, s_w,
                                     fed.psi, fed.alpha_z,
-                                    message=sign_message, n_total=C)
+                                    message=sign_message, n_total=C,
+                                    streaming=fed.consensus_streaming,
+                                    chunk_size=fed.consensus_chunk)
         if fed.fedbuff_lr_norm:
             z_upd = (zf.astype(jnp.float32) + lr_scale
                      * (z_upd.astype(jnp.float32) - zf.astype(jnp.float32))
@@ -877,18 +924,25 @@ def bafdp_round_sparse(state: FedState, batch: Any, key, *,
             n += z_l.size
         return sq / float(max(n, 1))
 
+    # block-scope statistics carry the explicit ``_block`` suffix: they are
+    # means over this round's DELIVERED rows (realized divisor
+    # ``metrics_k``), not fleet-wide values — identically labeled and
+    # identically valued between the dense active-scope round (which runs
+    # THIS function over the full-width masked block) and the gathered
+    # sparse round, so dense-vs-sparse histories compare key-for-key.
     metrics = {
         "loss": jnp.sum(loss_i * w_row) / wsum_act,
         "data_loss": jnp.sum(g_i * w_row) / wsum_act,
-        "lipschitz": jnp.sum(G_i * w_row) / wsum_act,
+        "lipschitz_block": jnp.sum(G_i * w_row) / wsum_act,
         "eps_mean": jnp.mean(eps_new),
         "lambda_mean": jnp.mean(lam_new),
-        "consensus_gap": subset_gap(),   # over the delivered block
+        "consensus_gap_block": subset_gap(),   # over the delivered block
         "n_active": jnp.sum(w_row),
-        "staleness_mean": jnp.sum(stale_v * w_row) / wsum_act,
-        "staleness_weight_mean": jnp.sum(
+        "staleness_mean_block": jnp.sum(stale_v * w_row) / wsum_act,
+        "staleness_weight_mean_block": jnp.sum(
             staleness_weights(stale_v, fed) * w_row) / wsum_act,
-        "compensation_norm": comp_norm,
+        "compensation_norm_block": comp_norm,
+        "metrics_k": wsum_act,
     }
     return new_state, metrics
 

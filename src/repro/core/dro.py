@@ -37,8 +37,11 @@ def eta_radius(n_samples: int, d: int, fed: FedConfig) -> float:
 
 
 def rho(eps, n_samples: int, d: int, c3: float, fed: FedConfig):
-    """rho_i^t = eta_i + sigma_{i,t}   (Eq. 7)."""
-    return eta_radius(n_samples, d, fed) + sigma_for_eps(eps, c3)
+    """rho_i^t = eta_i + sigma_{i,t}   (Eq. 7).  The noise-scale term
+    floors eps at the configured ``fed.eps_min`` — the same floor the
+    feasible set (Eq. 3) projects onto."""
+    return eta_radius(n_samples, d, fed) + sigma_for_eps(eps, c3,
+                                                         fed.eps_min)
 
 
 # ---------------------------------------------------------------------------

@@ -24,15 +24,25 @@ def gaussian_c3(d: int, delta: float, sensitivity: float) -> float:
     return math.sqrt(2.0 * d * math.log(1.25 / delta)) * sensitivity
 
 
-def sigma_for_eps(eps, c3: float):
-    """Gaussian-mechanism noise scale for privacy level eps (Eq. after (8))."""
-    return c3 / jnp.maximum(eps, 1e-6)
+def sigma_for_eps(eps, c3: float, eps_min: float = FedConfig.eps_min):
+    """Gaussian-mechanism noise scale for privacy level eps (Eq. after (8)).
+
+    ``eps`` is floored at ``eps_min`` — the SAME floor the feasible set
+    uses (:func:`eps_feasible`, constraint Eq. 3; default
+    ``FedConfig.eps_min``).  The pre-PR-7 hard-coded ``1e-6`` floor let an
+    out-of-range eps (bad init, direct call) silently request a noise
+    scale up to 1e4x larger than the feasibility analysis assumes; callers
+    with a :class:`FedConfig` in hand pass ``fed.eps_min`` explicitly.
+    """
+    return c3 / jnp.maximum(eps, eps_min)
 
 
-def perturb_inputs(key, x: jnp.ndarray, eps, c3: float) -> jnp.ndarray:
+def perturb_inputs(key, x: jnp.ndarray, eps, c3: float,
+                   eps_min: float = FedConfig.eps_min) -> jnp.ndarray:
     """x_tilde = x + v,  v ~ N(0, sigma^2 I).  ``eps`` broadcasts over the
-    leading (client) axes of ``x``."""
-    sigma = jnp.asarray(sigma_for_eps(eps, c3), x.dtype)
+    leading (client) axes of ``x``; the noise scale floors eps at
+    ``eps_min`` like the feasible set does."""
+    sigma = jnp.asarray(sigma_for_eps(eps, c3, eps_min), x.dtype)
     noise = jax.random.normal(key, x.shape, dtype=x.dtype)
     # sigma may carry leading client axes; broadcast from the left.
     while sigma.ndim < x.ndim:

@@ -29,10 +29,11 @@ def _resolve(impl: str) -> str:
 
 @functools.partial(jax.jit,
                    static_argnames=("psi", "alpha_z", "message", "impl",
-                                    "n_total"))
+                                    "n_total", "streaming", "chunk_size"))
 def sign_consensus(z, W, phi_mean, weights, psi: float, alpha_z: float,
                    message: str = "f32", impl: str = "auto",
-                   n_total: Optional[int] = None):
+                   n_total: Optional[int] = None,
+                   streaming: bool = False, chunk_size: int = 8):
     """The unified Eq. (20) consensus-path dispatch: every sign-sum flavour
     — plain mean (``weights=None``), staleness-decayed, and the int8 wire
     format — funnels through one entry point that picks the fused Pallas
@@ -56,11 +57,30 @@ def sign_consensus(z, W, phi_mean, weights, psi: float, alpha_z: float,
     the fused TPU kernels keep their tiled reduction and agree to float
     tolerance.  Requires ``weights`` (the padding/activity mask at
     minimum).
+
+    ``streaming=True`` consumes the fold as an online reduction over
+    arrival-event chunks of ``chunk_size`` rows
+    (``ref.sign_agg_fold_stream_ref``): the server never materializes
+    the full (S_max, D) message block — for ``message="int8"`` the wire
+    payload exists only one chunk at a time.  Bit-identical to the
+    materialized fold by construction (same left-fold order; chunk
+    boundaries only split the scan carry).  Only defined for the
+    active-subset fold, so it requires ``n_total``; ``impl`` is ignored
+    (the fused Pallas kernel is already a one-pass tiled reduction — the
+    streamed fold is the XLA-side arrival-event shape).
     """
     impl = _resolve(impl)
     if n_total is not None and weights is None:
         raise ValueError("n_total (active-subset reduction) needs weights "
                          "(the padding/activity mask at minimum)")
+    if streaming:
+        if n_total is None:
+            raise ValueError(
+                "streaming=True is the chunked active-subset left-fold — "
+                "it needs n_total (and weights)")
+        return ref.sign_agg_fold_stream_ref(z, W, phi_mean, weights, psi,
+                                            alpha_z, n_total, chunk_size,
+                                            message=message)
     if message == "int8":
         # client-side encode happens in f32 regardless of impl; the wire
         # format (and on TPU the server's HBM read) is what shrinks

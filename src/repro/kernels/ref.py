@@ -95,6 +95,129 @@ def sign_agg_fold_ref(z: jnp.ndarray, W: jnp.ndarray, phi_mean: jnp.ndarray,
     return (zf - alpha_z * dz).astype(z.dtype)
 
 
+def _fold_chunks(R: int, chunk_size: int, fold_chunk, init):
+    """Drive ``fold_chunk(start, size, acc)`` over ``[0, R)`` in row order:
+    a ``lax.scan`` over the full ``chunk_size``-row chunks, then the static
+    tail (R % chunk_size rows) as one short chunk.  Chunk boundaries never
+    reorder a left-fold's additions, so the result is bit-identical to the
+    single-pass fold for ANY chunk_size >= 1.  The tail is handled by a
+    second call (R and chunk_size are static) instead of zero-padding, so
+    no full-height (R, ...) intermediate is ever created."""
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    n_full, tail = divmod(R, chunk_size)
+
+    acc = init
+    if n_full:
+        def body(acc, i):
+            return fold_chunk(i * chunk_size, chunk_size, acc), None
+        acc, _ = jax.lax.scan(body, acc, jnp.arange(n_full))
+    if tail:
+        acc = fold_chunk(jnp.asarray(n_full * chunk_size), tail, acc)
+    return acc
+
+
+def fold_weighted_rowsum_stream(X: jnp.ndarray, weights: jnp.ndarray,
+                                chunk_size: int) -> jnp.ndarray:
+    """Streaming :func:`fold_weighted_rowsum`: the identical left-fold,
+    consumed ``chunk_size`` rows at a time (the FedBuff arrival-event
+    shape).  Bit-identical to the materialized fold by construction — the
+    row visit order is the same and a chunk boundary only splits the scan
+    carry, never regroups an addition."""
+    Xf = X.astype(jnp.float32)
+    wf = weights.astype(jnp.float32)
+
+    def fold_chunk(start, size, acc):
+        Xc = jax.lax.dynamic_slice_in_dim(Xf, start, size)
+        wc = jax.lax.dynamic_slice_in_dim(wf, start, size)
+
+        def row(j, a):
+            return a + wc[j] * Xc[j]
+
+        return jax.lax.fori_loop(0, size, row, acc)
+
+    return _fold_chunks(X.shape[0], chunk_size, fold_chunk,
+                        jnp.zeros(X.shape[1:], jnp.float32))
+
+
+def sign_agg_fold_stream_ref(z: jnp.ndarray, W: jnp.ndarray,
+                             phi_mean: jnp.ndarray, weights: jnp.ndarray,
+                             psi: float, alpha_z: float, n_total: int,
+                             chunk_size: int,
+                             message: str = "f32") -> jnp.ndarray:
+    """Streaming :func:`sign_agg_fold_ref`: the order-canonical weighted
+    consensus update consumed as an online reduction over arrival-event
+    chunks of ``chunk_size`` rows — the server never holds more than one
+    ``(chunk_size, D)`` message block at a time (jaxpr-asserted by the
+    equivalence suite), instead of materializing all ``(S_max, D)``.
+
+    ``message="int8"`` round-trips each chunk's signs through the int8
+    wire format (a lossless quantization — the payload IS the sign), so
+    the full int8 payload never exists either; bit-identical to both the
+    f32 streaming fold and the materialized
+    :func:`sign_agg_int8_fold_ref`."""
+    if message not in ("f32", "int8"):
+        raise ValueError(f"unknown sign message format: {message!r}")
+    zf = z.astype(jnp.float32)
+    wf = weights.astype(jnp.float32)
+    Wf = W.astype(jnp.float32)
+
+    def fold_chunk(start, size, acc):
+        Wc = jax.lax.dynamic_slice_in_dim(Wf, start, size)
+        wc = jax.lax.dynamic_slice_in_dim(wf, start, size)
+        sgn = jnp.sign(zf[None, :] - Wc)
+        if message == "int8":
+            # chunk-local encode/decode: int8 is exact on a sign message
+            sgn = sgn.astype(jnp.int8).astype(jnp.float32)
+
+        def row(j, a):
+            return a + wc[j] * sgn[j]
+
+        return jax.lax.fori_loop(0, size, row, acc)
+
+    wsum = _fold_chunks(W.shape[0], chunk_size, fold_chunk,
+                        jnp.zeros_like(zf)) / n_total
+    dz = phi_mean.astype(jnp.float32) + psi * wsum
+    return (zf - alpha_z * dz).astype(z.dtype)
+
+
+def fold_dual_rowsum(phi_rows: jnp.ndarray, weights: jnp.ndarray,
+                     chunk_size: int = 0) -> jnp.ndarray:
+    """``sum_j weights[j] * dequant(quant(phi_rows[j]))`` — the Eq. (22)
+    dual-side left-fold through the int8 dual wire format
+    (:mod:`repro.distributed.collectives`).  The absmax quantizer is
+    row-local, so the masked dense block and the gathered sparse block
+    fold identical decoded values — dense<->sparse bit-parity carries
+    over to the quantized dual, offset from the f32 wire by at most the
+    pinned per-coordinate tolerance.
+
+    ``chunk_size=0`` materializes the decode; ``chunk_size>=1`` encodes,
+    decodes, and folds one chunk of rows at a time (bit-identical — the
+    quantizer is row-local and the fold order is unchanged)."""
+    from repro.distributed import collectives
+
+    if chunk_size == 0:
+        dec = collectives.decode_dual_message(
+            collectives.encode_dual_message(phi_rows))
+        return fold_weighted_rowsum(dec, weights)
+    phif = phi_rows.astype(jnp.float32)
+    wf = weights.astype(jnp.float32)
+
+    def fold_chunk(start, size, acc):
+        pc = jax.lax.dynamic_slice_in_dim(phif, start, size)
+        wc = jax.lax.dynamic_slice_in_dim(wf, start, size)
+        dec = collectives.decode_dual_message(
+            collectives.encode_dual_message(pc))
+
+        def row(j, a):
+            return a + wc[j] * dec[j]
+
+        return jax.lax.fori_loop(0, size, row, acc)
+
+    return _fold_chunks(phi_rows.shape[0], chunk_size, fold_chunk,
+                        jnp.zeros(phi_rows.shape[1:], jnp.float32))
+
+
 def sign_agg_int8_fold_ref(z: jnp.ndarray, payload: jnp.ndarray,
                            scale: jnp.ndarray, phi_mean: jnp.ndarray,
                            psi: float, alpha_z: float,

@@ -23,6 +23,15 @@ dominant traffic term — and the per-client f32 dequant scales ride along
 like the weight column.  Dequantization happens in VMEM; the reduction
 accumulates in int32 (unweighted) or f32 (weighted), never in the int8
 wire dtype, which would wrap at C >= 128.
+
+Streaming note: the arrival-event streaming fold
+(``ops.sign_consensus(streaming=True)``, PR 7) is an XLA-side chunked
+left-fold over gathered active rows — see ``ref.sign_agg_fold_stream_ref``.
+It is deliberately NOT a Pallas variant: these kernels are already tiled
+one-pass reductions whose grid never materializes the (C, D) block in
+VMEM, so "streaming" buys nothing on-chip; what it bounds is the HOST/XLA
+peak message block on the sparse round path, where the kernel fallback
+would otherwise hold the full (S_max, D) gather.
 """
 from __future__ import annotations
 

@@ -91,7 +91,7 @@ def make_train_step(cfg: ArchConfig, fed: FedConfig
 
     def local_loss(params_i, batch_i, key_i, eps_i):
         from repro.core.privacy import sigma_for_eps
-        sigma = sigma_for_eps(eps_i, c3)
+        sigma = sigma_for_eps(eps_i, c3, fed.eps_min)
         return tr.loss_fn(params_i, batch_i, cfg, noise=(key_i, sigma))
 
     def train_step(state: FedState, batch, seed, act=None, stale=None):

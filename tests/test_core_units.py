@@ -31,6 +31,33 @@ def test_sigma_monotone_in_eps(eps):
     assert float(sigma_for_eps(eps, 3.0)) >= float(sigma_for_eps(eps + 1, 3.0))
 
 
+def test_sigma_floor_matches_configured_eps_min():
+    """Regression: sigma_for_eps used to floor eps at a hard-coded 1e-6
+    while eps_feasible floors at fed.eps_min (default 1e-2) — an
+    out-of-range eps reaching the noise path produced sigma up to 1e4x
+    larger than any eps the feasible set admits.  The floor must be the
+    SAME configured eps_min on both sides."""
+    c3 = 3.0
+    # below the floor: clamps to eps_min, not to 1e-6
+    assert float(sigma_for_eps(1e-5, c3)) == pytest.approx(
+        c3 / FedConfig.eps_min)
+    assert float(sigma_for_eps(-1.0, c3)) == pytest.approx(
+        c3 / FedConfig.eps_min)
+    # above the floor: unchanged
+    assert float(sigma_for_eps(2.0, c3)) == pytest.approx(c3 / 2.0)
+    # a custom (smaller or larger) floor is honored
+    assert float(sigma_for_eps(1e-5, c3, eps_min=1e-3)) == pytest.approx(
+        c3 / 1e-3)
+    assert float(sigma_for_eps(0.05, c3, eps_min=0.1)) == pytest.approx(
+        c3 / 0.1)
+    # and sigma now agrees with the projection: eps in the feasible set
+    # round-trips through both functions consistently
+    fed = FedConfig(privacy_budget_a=10.0, eps_min=0.1)
+    e = float(eps_feasible(jnp.array([-5.0]), fed)[0])
+    assert float(sigma_for_eps(e, c3, fed.eps_min)) == pytest.approx(
+        c3 / fed.eps_min)
+
+
 def test_perturb_noise_scale():
     key = jax.random.PRNGKey(0)
     x = jnp.zeros((200_000,))

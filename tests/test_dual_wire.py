@@ -1,0 +1,273 @@
+"""Eq. (22) dual wire format + streaming consensus fold.
+
+* the absmax int8 dual quantizer: deterministic, row-local, and
+  tolerance-pinned — per-coordinate decode error <= absmax *
+  DUAL_INT8_REL_ERR (it is NOT lossless, unlike the sign wire),
+* dual_message="int8" round-level parity: the quantized dual moves z by
+  exactly alpha_z * (decoded mean - f32 mean), bounded by the pinned
+  tolerance, on both the dense "all"-scope and the sparse round,
+* the streaming/chunked consensus fold: ANY chunk_size partition of the
+  same arrival order reproduces the materialized left-fold bit-for-bit
+  (plain grid + hypothesis property test), through every fold flavour
+  (weighted rowsum, sign fold f32/int8, dual fold),
+* ops.sign_consensus(streaming=True) dispatch: bit-identity with the
+  materialized path, argument validation, and a jaxpr assertion that the
+  streamed op holds no (S_max, D)-sized eqn output at all.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given, settings, st   # hypothesis or graceful-skip stubs
+from repro.configs import FedConfig, MLP_H1
+from repro.core import bafdp, init_fed_state
+from repro.core.byzantine import byz_mask
+from repro.core.privacy import gaussian_c3, perturb_inputs
+from repro.distributed import collectives
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.models.forecasting import init_forecaster, mse_loss
+
+
+# ---------------------------------------------------------------------------
+# the absmax int8 quantizer
+# ---------------------------------------------------------------------------
+def test_dual_round_trip_within_pinned_tolerance():
+    rng = np.random.RandomState(0)
+    phi = np.concatenate([
+        rng.randn(5, 64).astype(np.float32) * 3.0,
+        np.zeros((1, 64), np.float32),                   # all-zero row
+        np.full((1, 64), -2.5, np.float32),              # constant row
+        rng.randn(1, 64).astype(np.float32) * 1e-6,      # tiny magnitudes
+    ])
+    msg = collectives.encode_dual_message(jnp.asarray(phi))
+    dec = np.asarray(collectives.decode_dual_message(msg))
+    absmax = np.max(np.abs(phi), axis=-1, keepdims=True)
+    bound = absmax * collectives.DUAL_INT8_REL_ERR * (1 + 1e-5) + 1e-12
+    assert (np.abs(dec - phi) <= bound).all(), \
+        np.max(np.abs(dec - phi) - bound)
+    assert msg.payload.dtype == jnp.int8
+    assert int(np.max(np.abs(np.asarray(msg.payload, np.int32)))) <= 127
+
+
+def test_dual_zero_row_decodes_exactly():
+    msg = collectives.encode_dual_message(jnp.zeros((3, 16)))
+    np.testing.assert_array_equal(np.asarray(msg.payload), 0)
+    np.testing.assert_array_equal(
+        np.asarray(collectives.decode_dual_message(msg)), 0.0)
+
+
+def test_dual_encode_is_row_local_and_deterministic():
+    """Client i's encoding depends only on its own message — slicing rows
+    out of a block must reproduce the block's encoding bitwise.  This is
+    the mechanism that keeps dense<->sparse parity exact on the
+    quantized dual."""
+    phi = jax.random.normal(jax.random.PRNGKey(1), (7, 33)) * 2.0
+    full = collectives.encode_dual_message(phi)
+    again = collectives.encode_dual_message(phi)
+    np.testing.assert_array_equal(np.asarray(full.payload),
+                                  np.asarray(again.payload))
+    for i in (0, 3, 6):
+        row = collectives.encode_dual_message(phi[i:i + 1])
+        np.testing.assert_array_equal(np.asarray(row.payload[0]),
+                                      np.asarray(full.payload[i]))
+        np.testing.assert_array_equal(np.asarray(row.scale[0]),
+                                      np.asarray(full.scale[i]))
+
+
+def test_dual_message_bytes():
+    assert collectives.dual_message_bytes(9, 700, "f32") == (9 * 700 * 4, 0)
+    assert collectives.dual_message_bytes(9, 700, "int8") == (9 * 700, 36)
+    with pytest.raises(ValueError, match="dual message"):
+        collectives.dual_message_bytes(9, 700, "f16")
+    # >= 3.5x on any realistic model width (the scale column amortizes)
+    f32 = sum(collectives.dual_message_bytes(64, 4096, "f32"))
+    i8 = sum(collectives.dual_message_bytes(64, 4096, "int8"))
+    assert f32 / i8 >= 3.5
+
+
+def test_resolved_dual_message_validates():
+    assert FedConfig().resolved_dual_message == "f32"
+    assert FedConfig(dual_message="int8").resolved_dual_message == "int8"
+    with pytest.raises(ValueError, match="dual_message"):
+        _ = FedConfig(dual_message="f16").resolved_dual_message
+
+
+# ---------------------------------------------------------------------------
+# streaming fold: chunk-size invariance (bit-for-bit)
+# ---------------------------------------------------------------------------
+def _fold_problem(seed=0, R=11, D=97):
+    k = jax.random.PRNGKey(seed)
+    X = jax.random.normal(k, (R, D))
+    w = jnp.where(jax.random.uniform(jax.random.fold_in(k, 1), (R,)) > 0.3,
+                  jax.random.uniform(jax.random.fold_in(k, 2), (R,)), 0.0)
+    z = jax.random.normal(jax.random.fold_in(k, 3), (D,))
+    return X, w, z
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 3, 5, 11, 16])
+def test_streamed_folds_bit_identical(chunk):
+    """Every streamed fold flavour equals its materialized oracle
+    BIT-FOR-BIT at divisor, non-divisor, equal and oversized chunks."""
+    X, w, z = _fold_problem()
+    phi0 = jnp.zeros((X.shape[1],))
+    np.testing.assert_array_equal(
+        np.asarray(ref.fold_weighted_rowsum(X, w)),
+        np.asarray(ref.fold_weighted_rowsum_stream(X, w, chunk)))
+    base = np.asarray(ref.sign_agg_fold_ref(z, X, phi0, w, 0.01, 0.01, 40))
+    for message in ("f32", "int8"):
+        out = ref.sign_agg_fold_stream_ref(z, X, phi0, w, 0.01, 0.01, 40,
+                                           chunk, message=message)
+        np.testing.assert_array_equal(base, np.asarray(out),
+                                      err_msg=f"{message} chunk {chunk}")
+    np.testing.assert_array_equal(
+        np.asarray(ref.fold_dual_rowsum(X, w)),
+        np.asarray(ref.fold_dual_rowsum(X, w, chunk_size=chunk)))
+
+
+@given(st.integers(min_value=1, max_value=24),
+       st.integers(min_value=1, max_value=16),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=30, deadline=None)
+def test_streamed_fold_chunk_invariance_property(rows, chunk, seed):
+    """Hypothesis sweep: any (R, chunk_size) pairing reproduces the
+    materialized left-fold bit-for-bit — chunk boundaries can only split
+    the scan carry, never regroup an addition."""
+    X, w, z = _fold_problem(seed=seed, R=rows, D=33)
+    np.testing.assert_array_equal(
+        np.asarray(ref.fold_weighted_rowsum(X, w)),
+        np.asarray(ref.fold_weighted_rowsum_stream(X, w, chunk)))
+    phi0 = jnp.zeros((33,))
+    np.testing.assert_array_equal(
+        np.asarray(ref.sign_agg_fold_ref(z, X, phi0, w, 0.01, 0.01, 40)),
+        np.asarray(ref.sign_agg_fold_stream_ref(z, X, phi0, w, 0.01, 0.01,
+                                                40, chunk, message="int8")))
+
+
+def test_chunk_size_validation():
+    X, w, _ = _fold_problem()
+    with pytest.raises(ValueError, match="chunk_size"):
+        ref.fold_weighted_rowsum_stream(X, w, 0)
+
+
+# ---------------------------------------------------------------------------
+# ops.sign_consensus streaming dispatch
+# ---------------------------------------------------------------------------
+def test_sign_consensus_streaming_matches_materialized():
+    X, w, z = _fold_problem(seed=4, R=9, D=64)
+    phi = jax.random.normal(jax.random.PRNGKey(9), (64,)) * 0.1
+    for message in ("f32", "int8"):
+        base = kops.sign_consensus(z, X, phi, w, 0.01, 0.01,
+                                   message=message, impl="xla", n_total=40)
+        for chunk in (1, 3, 4, 9, 12):
+            out = kops.sign_consensus(z, X, phi, w, 0.01, 0.01,
+                                      message=message, n_total=40,
+                                      streaming=True, chunk_size=chunk)
+            np.testing.assert_array_equal(
+                np.asarray(base), np.asarray(out),
+                err_msg=f"{message} chunk {chunk}")
+
+
+def test_sign_consensus_streaming_needs_n_total():
+    X, w, z = _fold_problem(seed=5, R=4, D=8)
+    with pytest.raises(ValueError, match="streaming"):
+        kops.sign_consensus(z, X, jnp.zeros((8,)), w, 0.01, 0.01,
+                            streaming=True)
+
+
+def test_sign_consensus_streaming_jaxpr_holds_no_full_block():
+    """The streamed op must never hold an (S, D)-sized eqn output of ANY
+    dtype — each scan step touches one (chunk, D) slice.  The
+    materialized int8 path emits the full (S, D) payload (asserted as
+    the control)."""
+    S, D = 16, 512
+    X, w, z = _fold_problem(seed=6, R=S, D=D)
+    phi = jnp.zeros((D,))
+
+    def offenders(streaming):
+        from test_sparse_round import _iter_eqns
+        jaxpr = jax.make_jaxpr(
+            lambda z, X, p, w: kops.sign_consensus(
+                z, X, p, w, 0.01, 0.01, message="int8", n_total=64,
+                streaming=streaming, chunk_size=4))(z, X, phi, w)
+        out = []
+        for eqn in _iter_eqns(jaxpr.jaxpr):
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                shape = getattr(aval, "shape", ())
+                if len(shape) >= 2 and shape[0] == S \
+                        and int(np.prod(shape[1:])) >= D:
+                    out.append((eqn.primitive.name, shape))
+        return out
+
+    assert offenders(False), \
+        "control failed: materialized int8 should emit the (S, D) payload"
+    assert not offenders(True), offenders(True)
+
+
+# ---------------------------------------------------------------------------
+# round-level dual parity: within the pinned tolerance of the f32 wire
+# ---------------------------------------------------------------------------
+CFG = MLP_H1
+C = 6
+
+
+def _round_problem(fed, seed=0, b=8):
+    key = jax.random.PRNGKey(seed)
+    state = init_fed_state(key, lambda k: init_forecaster(k, CFG), fed)
+    X = jax.random.normal(key, (fed.n_clients, b, CFG.d_x))
+    Y = jnp.sum(X[..., :3], -1, keepdims=True) * 0.5
+    c3 = gaussian_c3(CFG.d_x + CFG.d_y, fed.dp_delta, fed.dp_sensitivity)
+
+    def local_loss(p, batch, k, eps):
+        x, y = batch
+        return mse_loss(p, perturb_inputs(k, x, eps, 0.02), y, CFG)
+
+    kw = dict(local_loss=local_loss, fed=fed, c3=c3, n_samples=200,
+              d_dim=CFG.d_x + CFG.d_y,
+              byz_mask=byz_mask(fed.n_clients, fed.n_byzantine))
+    return state, (X, Y), kw, key
+
+
+@pytest.mark.parametrize("scope", ["all", "active"])
+def test_dual_int8_round_within_pinned_tolerance(scope):
+    """dual_message='int8' moves z by exactly alpha_z * (decoded dual
+    mean - f32 dual mean): bounded coordinate-wise by alpha_z * mean_i
+    absmax(phi_i) * DUAL_INT8_REL_ERR.  Pinned on a warm state (nonzero
+    phi) for both consensus scopes."""
+    fed = FedConfig(n_clients=C, active_frac=1.0, consensus_scope=scope)
+    state, batch, kw, key = _round_problem(fed)
+    step = jax.jit(functools.partial(bafdp.bafdp_round, **kw))
+    # warm 2 rounds so phi is nonzero, all clients active (deterministic)
+    act = jnp.ones((C,), bool)
+    for t in range(2):
+        state, _ = step(state, batch, jax.random.fold_in(key, t), act=act)
+    assert any(float(jnp.max(jnp.abs(l))) > 0
+               for l in jax.tree.leaves(state.phi))
+
+    kw8 = dict(kw, fed=dataclasses.replace(fed, dual_message="int8"))
+    out_f32, _ = step(state, batch, key, act=act)
+    out_i8, _ = jax.jit(functools.partial(bafdp.bafdp_round, **kw8))(
+        state, batch, key, act=act)
+    for pf, p8, phi_l in zip(jax.tree.leaves(out_f32.z),
+                             jax.tree.leaves(out_i8.z),
+                             jax.tree.leaves(state.phi)):
+        rows = np.asarray(phi_l, np.float32).reshape(C, -1)
+        absmax = np.max(np.abs(rows), axis=-1)
+        # quantization bound + one f32 ulp of z for the update arithmetic
+        # (the two wires round z - alpha_z * (...) independently)
+        zmax = float(np.max(np.abs(np.asarray(pf, np.float32))))
+        bound = fed.alpha_z * absmax.mean() \
+            * collectives.DUAL_INT8_REL_ERR * (1 + 1e-4) \
+            + 2 * np.finfo(np.float32).eps * zmax + 1e-12
+        diff = np.max(np.abs(np.asarray(pf, np.float32)
+                             - np.asarray(p8, np.float32)))
+        assert diff <= bound, (diff, bound)
+    # and the quantization genuinely engaged (phi nonzero => z moved)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(out_f32.z),
+                               jax.tree.leaves(out_i8.z)))

@@ -117,6 +117,24 @@ GRID = [dict(staleness_decay=d, staleness_compensation=c, sign_message=m,
 GRID += [dict(staleness_decay=d, staleness_compensation="taylor",
               sign_message="int8", omega_optimizer=o, fedbuff_lr_norm=True)
          for d in ("constant", "poly") for o in ("sgd", "adam")]
+# dual_message x sign_message axis: the absmax int8 dual quantizer is
+# lossy vs the f32 wire but ROW-LOCAL, so the masked dense block and the
+# gathered sparse block decode identical per-client values — the
+# dense<->sparse contract stays BIT-identical even on the quantized dual
+GRID += [dict(staleness_decay=d, staleness_compensation=c, sign_message=m,
+              dual_message="int8", omega_optimizer="sgd")
+         for d in ("constant", "poly")
+         for c in ("none", "taylor")
+         for m in ("f32", "int8")]
+# streaming arrival-event fold: chunked left-folds visit rows in the same
+# order on both paths (chunk boundaries only split the scan carry), at a
+# divisor and a non-divisor chunk size (the tail-chunk path)
+GRID += [dict(staleness_decay="poly", staleness_compensation="taylor",
+              sign_message=m, dual_message=dm, omega_optimizer="sgd",
+              consensus_streaming=True, consensus_chunk=cs)
+         for m in ("f32", "int8")
+         for dm in ("f32", "int8")
+         for cs in (2, 3)]
 
 
 @pytest.mark.parametrize(
@@ -200,6 +218,104 @@ def test_scope_all_unchanged_by_this_pr():
     z_all = np.asarray(jax.tree.leaves(out_all.z)[0])
     z_act = np.asarray(jax.tree.leaves(out_act.z)[0])
     assert not np.array_equal(z_all, z_act)
+
+
+def test_streaming_round_bit_identical_to_materialized():
+    """consensus_streaming=True must reproduce the materialized round
+    BIT-FOR-BIT at every chunk size: the streamed fold visits the same
+    rows in the same order, so the chunk size can only split the scan
+    carry, never regroup an addition.  (This is also the
+    dual_message='f32' / streaming-off bit-compat pin: the default
+    config IS the materialized path.)"""
+    base = FedConfig(n_clients=C, active_frac=0.5, staleness_decay="poly",
+                     staleness_compensation="taylor", sign_message="int8")
+    state, batch, dense, sparse, key = make_problem(base)
+    rng = np.random.RandomState(21)
+    rounds = [draw_round(rng) for _ in range(3)]
+
+    def run(fed_kw):
+        fed = dataclasses.replace(base, consensus_scope="active", **fed_kw)
+        _, _, _, sp, _ = make_problem(fed)
+        s = state
+        for t, (_, _, (idx, stale, weight)) in enumerate(rounds):
+            s, m = sp(s, batch, jax.random.fold_in(key, t),
+                      idx=jnp.asarray(idx), stale=jnp.asarray(stale),
+                      weight=jnp.asarray(weight))
+        return s
+
+    ref_state = run({})
+    for chunk in (1, 2, 3, SMAX, SMAX + 3):
+        out = run(dict(consensus_streaming=True, consensus_chunk=chunk))
+        assert_states_equal(ref_state, out, f"chunk {chunk}")
+
+
+def test_streaming_requires_active_scope():
+    fed = FedConfig(n_clients=C, consensus_streaming=True)   # scope="all"
+    key = jax.random.PRNGKey(0)
+    state = init_fed_state(key, lambda k: init_forecaster(k, CFG), fed)
+    X = jax.random.normal(key, (C, 4, CFG.d_x))
+    with pytest.raises(ValueError, match="consensus_streaming"):
+        bafdp.bafdp_round(
+            state, (X, jnp.zeros((C, 4, 1))), key,
+            local_loss=lambda p, b, k, e: 0.0, fed=fed, c3=1.0,
+            n_samples=10, d_dim=4, byz_mask=byz_mask(C, 0))
+
+
+def test_block_metrics_identically_labeled():
+    """The dense active-scope round and the gathered sparse round must
+    report the SAME metric keys with the same values: block-scope
+    statistics carry the explicit ``_block`` suffix plus the realized
+    divisor ``metrics_k``, so a sparse history can never be silently
+    compared against fleet-wide keys of the same name."""
+    fed = FedConfig(n_clients=C, active_frac=0.5, staleness_decay="poly",
+                    staleness_compensation="taylor")
+    state, batch, dense, sparse, key = make_problem(fed)
+    rng = np.random.RandomState(5)
+    mask, ages, (idx, stale, weight) = draw_round(rng)
+    act, stale_c = densify(mask, ages)
+    _, md = dense(state, batch, key, act=act, stale=stale_c)
+    _, ms = sparse(state, batch, key, idx=jnp.asarray(idx),
+                   stale=jnp.asarray(stale), weight=jnp.asarray(weight))
+    assert set(md.keys()) == set(ms.keys())
+    for suffixed in ("lipschitz_block", "consensus_gap_block",
+                     "staleness_mean_block", "staleness_weight_mean_block",
+                     "compensation_norm_block", "metrics_k"):
+        assert suffixed in ms, suffixed
+    # the un-suffixed fleet-wide spellings must NOT leak out of the
+    # block-scope rounds
+    for fleet_key in ("lipschitz", "consensus_gap", "staleness_mean",
+                      "staleness_weight_mean", "compensation_norm"):
+        assert fleet_key not in ms, fleet_key
+    for k in md:
+        np.testing.assert_allclose(float(md[k]), float(ms[k]), rtol=1e-6,
+                                   err_msg=k)
+    # the realized divisor is the delivered weight sum (>= 1)
+    np.testing.assert_array_equal(float(ms["metrics_k"]),
+                                  max(float(np.sum(weight)), 1.0))
+
+
+def test_dense_all_scope_keeps_fleet_metric_keys():
+    """The 'all'-scope dense round reports fleet-wide statistics under the
+    plain (un-suffixed) keys — only block-scope rounds rename."""
+    fed = FedConfig(n_clients=C, active_frac=0.5)
+    key = jax.random.PRNGKey(2)
+    state = init_fed_state(key, lambda k: init_forecaster(k, CFG), fed)
+    X = jax.random.normal(key, (C, 8, CFG.d_x))
+    Y = jnp.sum(X[..., :3], -1, keepdims=True) * 0.5
+    c3 = gaussian_c3(CFG.d_x + CFG.d_y, fed.dp_delta, fed.dp_sensitivity)
+
+    def local_loss(p, b, k, eps):
+        x, y = b
+        return mse_loss(p, perturb_inputs(k, x, eps, 0.02), y, CFG)
+
+    _, m = jax.jit(functools.partial(
+        bafdp.bafdp_round, local_loss=local_loss, fed=fed, c3=c3,
+        n_samples=200, d_dim=CFG.d_x + CFG.d_y,
+        byz_mask=byz_mask(C, 0)))(state, (X, Y), key)
+    for fleet_key in ("lipschitz", "consensus_gap", "staleness_mean",
+                      "staleness_weight_mean", "compensation_norm"):
+        assert fleet_key in m, fleet_key
+        assert f"{fleet_key}_block" not in m
 
 
 # ---------------------------------------------------------------------------
@@ -762,3 +878,58 @@ def test_million_client_round_smoke():
          jnp.asarray([1, 2, 3, 4, 5, 6, 7, 1_000_000], jnp.int32),
          jnp.zeros((S,)), jnp.asarray([1., 1, 1, 1, 1, 1, 1, 0]))
     assert traces["n"] == 1, f"sparse round retraced {traces['n']} times"
+
+
+def test_streaming_round_jaxpr_no_message_block():
+    """On the streaming path the int8 wire payload must exist only one
+    (chunk, D) block at a time: the round jaxpr contains NO (S_max, D)
+    int8 eqn output (the Eq. 20 sign payload and the Eq. 22 dual payload
+    are encoded chunk-locally inside the scan).  The materialized round
+    emits exactly that (S_max, D) payload — asserted as the control, so
+    this test cannot rot into vacuously passing."""
+    S, D = 8, 512
+    C_loc = 64
+
+    def make(fed_kw):
+        fed = FedConfig(n_clients=C_loc, active_frac=S / C_loc,
+                        consensus_scope="active", omega_optimizer="sgd",
+                        sign_message="int8", dual_message="int8", **fed_kw)
+
+        def init_tiny(key):
+            return {"w": 0.01 * jax.random.normal(key, (D,))}
+
+        state = init_fed_state(jax.random.PRNGKey(0), init_tiny, fed,
+                               n_clients=C_loc)
+
+        def local_loss(p, batch, k, eps):
+            x, y = batch
+            return jnp.mean((x @ p["w"] - y) ** 2)
+
+        Xg = jax.random.normal(jax.random.PRNGKey(1), (S, 4, D))
+        Yg = jnp.sum(Xg[..., :2], -1) * 0.3
+        idx = jnp.arange(S, dtype=jnp.int32)
+        f = functools.partial(
+            bafdp.bafdp_round_sparse, local_loss=local_loss, fed=fed,
+            c3=1.0, n_samples=100, d_dim=D,
+            byz_mask=jnp.zeros((C_loc,), bool))
+        return jax.make_jaxpr(
+            lambda s, b, k, i: f(s, b, k, idx=i))(
+            state, (Xg, Yg), jax.random.PRNGKey(2), idx)
+
+    def int8_blocks(jaxpr):
+        found = []
+        for eqn in _iter_eqns(jaxpr.jaxpr):
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                if getattr(aval, "dtype", None) == jnp.int8 \
+                        and getattr(aval, "shape", ()) == (S, D):
+                    found.append((eqn.primitive.name, aval.shape))
+        return found
+
+    materialized = int8_blocks(make({}))
+    assert materialized, "control failed: the materialized round should " \
+        "emit the full (S_max, D) int8 payload"
+    streamed = int8_blocks(make(dict(consensus_streaming=True,
+                                     consensus_chunk=3)))
+    assert not streamed, (
+        f"(S_max, D) int8 message blocks on the streaming path: {streamed}")
