@@ -1,0 +1,72 @@
+"""repro.analysis — fedlint, the jaxpr invariant analyzer.
+
+Turns the repo's ad-hoc jaxpr assertions (no dense (C, D) intermediates
+on the sparse path, no (S_max, D) blocks in streamed folds, no narrow-
+dtype accumulators, fleet-indexed RNG discipline, no host callbacks, no
+f64 leakage) into an enforced rule system with three exposures:
+
+- :func:`verify` — lint any function over (possibly abstract) args;
+- :func:`contract` — decorator gating round entrypoints behind
+  ``REPRO_FEDLINT=1``;
+- ``python -m repro.analysis.cli`` — sweep the entrypoint manifest.
+
+This package root stays light (jax + numpy only); the manifest, which
+imports the round implementations, is loaded lazily by the CLI.
+"""
+from repro.analysis.rules import (
+    DEFAULT_RULES,
+    NARROW_DTYPES,
+    AccumulationDtypeRule,
+    F64LeakageRule,
+    Finding,
+    HostSyncRule,
+    MemoryContractRule,
+    RngDisciplineRule,
+    Rule,
+    RuleContext,
+    default_rules,
+)
+from repro.analysis.traversal import (
+    format_path,
+    iter_eqns,
+    iter_eqns_with_path,
+    out_avals,
+    subjaxprs,
+)
+from repro.analysis.verify import (
+    ENV_FLAG,
+    ContractViolation,
+    Report,
+    apply_baseline,
+    contract,
+    lint_jaxpr,
+    trace,
+    verify,
+)
+
+__all__ = [
+    "AccumulationDtypeRule",
+    "ContractViolation",
+    "DEFAULT_RULES",
+    "ENV_FLAG",
+    "F64LeakageRule",
+    "Finding",
+    "HostSyncRule",
+    "MemoryContractRule",
+    "NARROW_DTYPES",
+    "Report",
+    "RngDisciplineRule",
+    "Rule",
+    "RuleContext",
+    "apply_baseline",
+    "contract",
+    "default_rules",
+    "format_path",
+    "iter_eqns",
+    "iter_eqns_with_path",
+    "lint_jaxpr",
+    "out_avals",
+    "subjaxprs",
+    "trace",
+    "verify",
+]

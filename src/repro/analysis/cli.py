@@ -1,0 +1,145 @@
+"""fedlint CLI: sweep the entrypoint manifest and report.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis.cli               # full sweep
+    PYTHONPATH=src python -m repro.analysis.cli --selftest    # fixtures
+    PYTHONPATH=src python -m repro.analysis.cli --only sparse # filter
+    PYTHONPATH=src python -m repro.analysis.cli --json -      # JSON report
+    PYTHONPATH=src python -m repro.analysis.cli --list        # entry names
+
+Exit status is 1 if any entrypoint has unsuppressed errors (or the
+selftest finds a rule that misses its seeded violation), else 0 — wire
+it as a cheap fail-first CI step before the test shards.
+
+Baseline file (``--baseline``, default ``baseline.json`` next to this
+module)::
+
+    {"suppressions": {"<fingerprint>": "<written justification>", ...}}
+
+Fingerprints appear in the JSON report and in human output for every
+finding.  Stale entries (fingerprints that no longer fire anywhere) are
+warned about so the file cannot accrete dead suppressions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict
+
+DEFAULT_BASELINE = pathlib.Path(__file__).parent / "baseline.json"
+
+
+def load_baseline(path: pathlib.Path) -> Dict[str, str]:
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    supp = data.get("suppressions", {})
+    if not isinstance(supp, dict):
+        raise SystemExit(f"malformed baseline {path}: 'suppressions' "
+                         f"must be an object")
+    return {str(k): str(v) for k, v in supp.items()}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.cli",
+        description="fedlint: jaxpr invariant analyzer for the BAFDP "
+                    "round paths")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run seeded-violation fixtures instead of the "
+                         "manifest")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="only sweep manifest entries whose name contains "
+                         "SUBSTR")
+    ap.add_argument("--list", action="store_true",
+                    help="list manifest entry names and exit")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write a JSON report to PATH ('-' = stdout)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    metavar="PATH", help="baseline suppression file "
+                                         "(default: %(default)s)")
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        from repro.analysis.fixtures import FIXTURES, run_selftest
+        problems = run_selftest()
+        if problems:
+            for p in problems:
+                print(f"SELFTEST FAIL: {p}")
+            return 1
+        print(f"selftest OK: {len(FIXTURES)} fixtures, every rule "
+              f"catches its seeded violation and passes its clean twin")
+        return 0
+
+    # heavy imports (jax trace of every round flavour) only when sweeping
+    from repro.analysis.manifest import build_manifest
+    from repro.analysis.verify import apply_baseline, lint_jaxpr
+
+    baseline = load_baseline(pathlib.Path(args.baseline))
+    entries = build_manifest()
+    if args.only:
+        entries = [e for e in entries if args.only in e.name]
+        if not entries:
+            print(f"no manifest entry matches --only {args.only!r}")
+            return 1
+    if args.list:
+        for e in entries:
+            print(f"{e.name:32s} {e.description}")
+        return 0
+
+    reports = []
+    for e in entries:
+        try:
+            closed = e.trace()
+        except Exception as exc:  # a broken trace is itself a failure
+            print(f"== {e.name}: TRACE FAILED: {type(exc).__name__}: "
+                  f"{exc}")
+            reports.append(None)
+            continue
+        rep = lint_jaxpr(closed, e.make_rules(), e.bindings, name=e.name)
+        apply_baseline(rep, {fp: why for fp, why in baseline.items()
+                             if fp in {f.fingerprint
+                                       for f in rep.findings}})
+        reports.append(rep)
+        print(rep.format_human())
+        for f in rep.findings:
+            print(f"     fingerprint: {f.fingerprint}")
+
+    # stale-baseline check is global: an entry is stale only if it fired
+    # in NO entrypoint
+    fired = {f.fingerprint
+             for rep in reports if rep is not None
+             for f, _ in rep.suppressed}
+    stale = [fp for fp in baseline if fp not in fired]
+    for fp in stale:
+        print(f"WARNING: stale baseline entry (fires nowhere): {fp}")
+
+    failed = [r for r in reports if r is None or not r.ok]
+    n_err = sum(len(r.errors) for r in reports if r is not None)
+    n_supp = sum(len(r.suppressed) for r in reports if r is not None)
+    print(f"-- fedlint: {len(reports)} entrypoint(s), {n_err} error(s), "
+          f"{n_supp} baselined, {len(stale)} stale baseline entr"
+          f"{'y' if len(stale) == 1 else 'ies'}")
+
+    if args.json:
+        payload = {
+            "entries": [r.to_dict() for r in reports if r is not None],
+            "trace_failures": [e.name for e, r in zip(entries, reports)
+                               if r is None],
+            "stale_baseline": stale,
+            "ok": not failed,
+        }
+        text = json.dumps(payload, indent=2)
+        if args.json == "-":
+            print(text)
+        else:
+            pathlib.Path(args.json).write_text(text + "\n")
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

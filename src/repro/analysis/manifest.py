@@ -1,0 +1,307 @@
+"""The fedlint entrypoint manifest: every jitted round/fold flavour the
+repo ships, registered with the rules and dimension bindings that govern
+it.  ``python -m repro.analysis.cli`` sweeps this list as a CI gate, so a
+new round variant added without updating the manifest is the gap the
+ROADMAP note ("run fedlint before adding a round variant") closes.
+
+Entries trace through :func:`repro.analysis.verify.trace`, which accepts
+``jax.ShapeDtypeStruct`` leaves anywhere an array goes — the C=1M sparse
+round is traced from a ``jax.eval_shape`` state skeleton and never
+allocates a single fleet-width buffer.
+
+Kept OUT of ``repro.analysis.__init__``: this module imports the round
+implementations (``core.bafdp`` itself imports the analyzer for its
+contract decorator), so the CLI loads it lazily.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.rules import (
+    AccumulationDtypeRule,
+    F64LeakageRule,
+    HostSyncRule,
+    MemoryContractRule,
+    RngDisciplineRule,
+    Rule,
+)
+from repro.analysis.verify import trace
+
+
+@dataclasses.dataclass
+class Entry:
+    name: str
+    description: str
+    make_rules: Callable[[], List[Rule]]
+    bindings: Dict[str, int]
+    trace: Callable[[], Any]          # () -> ClosedJaxpr
+
+
+def _base_rules() -> List[Rule]:
+    """The binding-free rules every entrypoint gets."""
+    return [AccumulationDtypeRule(), RngDisciplineRule(), HostSyncRule(),
+            F64LeakageRule()]
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# round-level entries
+# ---------------------------------------------------------------------------
+def _mlp_round_problem(fed):
+    """The test-suite's small MLP problem (concrete arrays — tracing a
+    C=6 fleet is free)."""
+    from repro.configs import MLP_H1
+    from repro.core import init_fed_state
+    from repro.core.byzantine import byz_mask
+    from repro.core.privacy import gaussian_c3, perturb_inputs
+    from repro.models.forecasting import init_forecaster, mse_loss
+
+    key = jax.random.PRNGKey(0)
+    state = init_fed_state(key, lambda k: init_forecaster(k, MLP_H1), fed)
+    X = jax.random.normal(key, (fed.n_clients, 4, MLP_H1.d_x))
+    Y = jnp.sum(X[..., :3], -1, keepdims=True) * 0.5
+    c3 = gaussian_c3(MLP_H1.d_x + MLP_H1.d_y, fed.dp_delta,
+                     fed.dp_sensitivity)
+
+    def local_loss(p, batch, k, eps):
+        x, y = batch
+        return mse_loss(p, perturb_inputs(k, x, eps, 0.02), y, MLP_H1)
+
+    kw = dict(local_loss=local_loss, fed=fed, c3=c3, n_samples=200,
+              d_dim=MLP_H1.d_x + MLP_H1.d_y)
+    bm = byz_mask(fed.n_clients, fed.n_byzantine)
+    return state, (X, Y), key, bm, kw
+
+
+def _trace_dense_round(scope: str):
+    from repro.configs import FedConfig
+    from repro.core import bafdp
+
+    fed = FedConfig(n_clients=6, active_frac=0.5, consensus_scope=scope,
+                    byzantine_frac=1 / 3, attack="gaussian",
+                    staleness_decay="hinge",
+                    staleness_compensation="taylor",
+                    omega_optimizer="adam")
+    state, batch, key, bm, kw = _mlp_round_problem(fed)
+    return trace(
+        lambda s, b, k, m: bafdp.bafdp_round(s, b, k, byz_mask=m, **kw),
+        state, batch, key, bm)
+
+
+def _trace_sparse_round():
+    from repro.configs import FedConfig
+    from repro.core import bafdp, init_fed_state
+
+    C, S, D = 64, 8, 16
+    fed = FedConfig(n_clients=C, active_frac=S / C,
+                    consensus_scope="active", byzantine_frac=0.25,
+                    attack="gaussian", staleness_decay="poly",
+                    staleness_compensation="taylor",
+                    compensation_scale_mode="per_client",
+                    omega_optimizer="sgd")
+
+    def init_tiny(key):
+        return {"w": 0.01 * jax.random.normal(key, (D,)),
+                "b": jnp.zeros(())}
+
+    state = init_fed_state(jax.random.PRNGKey(0), init_tiny, fed,
+                           n_clients=C)
+
+    def local_loss(p, batch, k, eps):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    Xg = jax.random.normal(jax.random.PRNGKey(1), (S, 4, D))
+    Yg = jnp.sum(Xg[..., :2], -1) * 0.3
+    from repro.core.byzantine import byz_mask as mk_mask
+    bm = mk_mask(C, fed.n_byzantine)
+    idx = jnp.asarray([5, 63, 17, 33, 0, 42, 7, 21], jnp.int32)
+    stale = jnp.asarray([0, 3, 1, 0, 7, 0, 2, 0], jnp.float32)
+    weight = jnp.ones((S,), jnp.float32)
+    return trace(
+        lambda s, b, k, m, i, st, w: bafdp.bafdp_round_sparse(
+            s, b, k, local_loss=local_loss, fed=fed, c3=1.0,
+            n_samples=100, d_dim=D, byz_mask=m, idx=i, stale=st, weight=w),
+        state, (Xg, Yg), jax.random.PRNGKey(2), bm, idx, stale, weight)
+
+
+C_BIG = 1_000_000
+
+
+def _trace_sparse_round_c1m():
+    """The C=1M round, traced from abstract shapes: the FedState skeleton
+    comes from ``jax.eval_shape`` and every fleet-width input is a
+    ShapeDtypeStruct — nothing O(C) is ever allocated."""
+    from repro.configs import FedConfig
+    from repro.core import bafdp, init_fed_state
+
+    S, D = 8, 8
+    fed = FedConfig(n_clients=C_BIG, active_frac=S / C_BIG,
+                    consensus_scope="active", omega_optimizer="sgd")
+
+    def init_tiny(key):
+        return {"w": 0.01 * jax.random.normal(key, (D,)),
+                "b": jnp.zeros(())}
+
+    state = jax.eval_shape(
+        lambda k: init_fed_state(k, init_tiny, fed, n_clients=C_BIG),
+        _sds((2,), jnp.uint32))
+
+    def local_loss(p, batch, k, eps):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    batch = (_sds((S, 4, D)), _sds((S, 4)))
+    return trace(
+        lambda s, b, k, m, i, st, w: bafdp.bafdp_round_sparse(
+            s, b, k, local_loss=local_loss, fed=fed, c3=1.0,
+            n_samples=100, d_dim=D, byz_mask=m, idx=i, stale=st, weight=w),
+        state, batch, _sds((2,), jnp.uint32), _sds((C_BIG,), jnp.bool_),
+        _sds((S,), jnp.int32), _sds((S,)), _sds((S,)))
+
+
+def _trace_streamed_round_int8():
+    from repro.configs import FedConfig
+    from repro.core import bafdp, init_fed_state
+
+    C, S, D = 64, 8, 512
+    fed = FedConfig(n_clients=C, active_frac=S / C,
+                    consensus_scope="active", omega_optimizer="sgd",
+                    sign_message="int8", dual_message="int8",
+                    consensus_streaming=True, consensus_chunk=3)
+
+    def init_tiny(key):
+        return {"w": 0.01 * jax.random.normal(key, (D,))}
+
+    state = init_fed_state(jax.random.PRNGKey(0), init_tiny, fed,
+                           n_clients=C)
+
+    def local_loss(p, batch, k, eps):
+        x, y = batch
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    Xg = jax.random.normal(jax.random.PRNGKey(1), (S, 4, D))
+    Yg = jnp.sum(Xg[..., :2], -1) * 0.3
+    return trace(
+        lambda s, b, k, m, i: bafdp.bafdp_round_sparse(
+            s, b, k, local_loss=local_loss, fed=fed, c3=1.0,
+            n_samples=100, d_dim=D, byz_mask=m, idx=i),
+        state, (Xg, Yg), jax.random.PRNGKey(2),
+        jnp.zeros((C,), bool), jnp.arange(S, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# op-level entries (the Eq. 20 consensus dispatch + the streamed folds)
+# ---------------------------------------------------------------------------
+def _fold_inputs(S, D):
+    k = jax.random.PRNGKey(6)
+    X = jax.random.normal(k, (S, D))
+    w = jax.random.uniform(jax.random.fold_in(k, 1), (S,))
+    z = jax.random.normal(jax.random.fold_in(k, 2), (D,))
+    return X, w, z
+
+
+def _trace_sign_consensus(message: str, streaming: bool):
+    from repro.kernels import ops as kops
+
+    S, D = 16, 512
+    X, w, z = _fold_inputs(S, D)
+    phi = jnp.zeros((D,))
+    return trace(
+        lambda z, X, p, w: kops.sign_consensus(
+            z, X, p, w, 0.01, 0.01, message=message, impl="xla",
+            n_total=64, streaming=streaming, chunk_size=4),
+        z, X, phi, w)
+
+
+def _trace_dual_fold_stream():
+    from repro.kernels import ref as kref
+
+    S, D = 16, 256
+    X, w, _ = _fold_inputs(S, D)
+    return trace(lambda X, w: kref.fold_dual_rowsum(X, w, chunk_size=5),
+                 X, w)
+
+
+# ---------------------------------------------------------------------------
+# the manifest
+# ---------------------------------------------------------------------------
+def build_manifest() -> List[Entry]:
+    scatter_ok = ("scatter", "scatter-add")
+    return [
+        Entry(
+            name="dense-round-all",
+            description="bafdp_round, consensus_scope='all' (seed "
+                        "semantics): gaussian attack, hinge decay, taylor "
+                        "compensation, adam",
+            make_rules=_base_rules, bindings={},
+            trace=lambda: _trace_dense_round("all")),
+        Entry(
+            name="dense-round-active",
+            description="bafdp_round, consensus_scope='active' — the "
+                        "masked full-width oracle that delegates to the "
+                        "sparse path (no C binding: the (C, D) block IS "
+                        "its working set)",
+            make_rules=_base_rules, bindings={},
+            trace=lambda: _trace_dense_round("active")),
+        Entry(
+            name="sparse-round",
+            description="bafdp_round_sparse, C=64 S=8: gathered O(S) "
+                        "round with per-client compensation scale + "
+                        "gaussian attack",
+            make_rules=lambda: _base_rules() + [MemoryContractRule(
+                "C", allow_primitives=scatter_ok, min_inner_elems=3)],
+            bindings={"C": 64},
+            trace=_trace_sparse_round),
+        Entry(
+            name="sparse-round-c1m",
+            description="bafdp_round_sparse at C=1,000,000 from abstract "
+                        "shapes (jax.eval_shape skeleton — zero "
+                        "allocation): the O(S) memory contract at fleet "
+                        "scale",
+            make_rules=lambda: _base_rules() + [MemoryContractRule(
+                "C", allow_primitives=scatter_ok, min_inner_elems=3)],
+            bindings={"C": C_BIG},
+            trace=_trace_sparse_round_c1m),
+        Entry(
+            name="sparse-round-streamed-int8",
+            description="streamed arrival-event round, both int8 wire "
+                        "formats: no (S_max, D) int8 payload block and no "
+                        "dense (C, D) intermediate",
+            make_rules=lambda: _base_rules() + [
+                MemoryContractRule("C", allow_primitives=scatter_ok,
+                                   min_inner_elems=3),
+                MemoryContractRule("S_max", dtypes=("int8",),
+                                   min_inner_elems=512)],
+            bindings={"C": 64, "S_max": 8},
+            trace=_trace_streamed_round_int8),
+        Entry(
+            name="sign-consensus-f32",
+            description="ops.sign_consensus materialized active-subset "
+                        "fold, f32 wire",
+            make_rules=_base_rules, bindings={},
+            trace=lambda: _trace_sign_consensus("f32", False)),
+        Entry(
+            name="sign-consensus-streamed-int8",
+            description="ops.sign_consensus streaming int8: the chunked "
+                        "fold must hold no (S_max, D) block of ANY dtype",
+            make_rules=lambda: _base_rules() + [MemoryContractRule(
+                "S_max", min_inner_elems=512)],
+            bindings={"S_max": 16},
+            trace=lambda: _trace_sign_consensus("int8", True)),
+        Entry(
+            name="dual-fold-streamed-int8",
+            description="ref.fold_dual_rowsum chunked: the Eq. 22 dual "
+                        "decode exists one chunk at a time",
+            make_rules=lambda: _base_rules() + [MemoryContractRule(
+                "S_max", min_inner_elems=256)],
+            bindings={"S_max": 16},
+            trace=_trace_dual_fold_stream),
+    ]

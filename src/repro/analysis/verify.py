@@ -1,0 +1,239 @@
+"""fedlint entrypoints: ``verify(fn, *args, rules=...)`` traces a function
+to a jaxpr (abstract shapes welcome — a C=1M check allocates nothing) and
+runs rules over it; ``contract(...)`` wraps a round function so the check
+runs once per abstract signature when ``REPRO_FEDLINT=1``; ``lint_jaxpr``
+is the core both share.
+
+Baselines: a finding can be suppressed by fingerprint with a written
+justification (``apply_baseline``).  The CLI persists these in
+``src/repro/analysis/baseline.json``; an entry whose fingerprint no longer
+matches anything is reported as stale so the file cannot accrete dead
+suppressions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.analysis.rules import Finding, Rule, RuleContext
+from repro.analysis.traversal import iter_eqns
+
+ENV_FLAG = "REPRO_FEDLINT"
+
+
+class ContractViolation(AssertionError):
+    """A jaxpr contract failed.  Subclasses AssertionError so existing
+    ``pytest.raises(AssertionError)``-style harnesses keep working."""
+
+    def __init__(self, report: "Report"):
+        self.report = report
+        super().__init__("\n" + report.format_human())
+
+
+@dataclasses.dataclass
+class Report:
+    """Findings for one linted entrypoint."""
+    name: str
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    suppressed: List[Tuple[Finding, str]] = dataclasses.field(
+        default_factory=list)
+    stale_baseline: List[str] = dataclasses.field(default_factory=list)
+    n_eqns: int = 0
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    @property
+    def warnings(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "warning"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def raise_if_failed(self) -> "Report":
+        if not self.ok:
+            raise ContractViolation(self)
+        return self
+
+    def format_human(self) -> str:
+        lines = [f"== {self.name}: {len(self.errors)} error(s), "
+                 f"{len(self.warnings)} warning(s), "
+                 f"{len(self.suppressed)} baselined "
+                 f"({self.n_eqns} eqns)"]
+        for f in self.findings:
+            lines.append("  " + f.format().replace("\n", "\n  "))
+        for f, reason in self.suppressed:
+            lines.append(f"  baselined {f.rule} [{f.primitive}] at "
+                         f"{f.path}: {reason}")
+        for fp in self.stale_baseline:
+            lines.append(f"  STALE baseline entry (no longer fires): {fp}")
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "n_eqns": self.n_eqns,
+            "ok": self.ok,
+            "findings": [dataclasses.asdict(f) | {"fingerprint":
+                                                  f.fingerprint}
+                         for f in self.findings],
+            "suppressed": [dataclasses.asdict(f)
+                           | {"fingerprint": f.fingerprint,
+                              "reason": reason}
+                           for f, reason in self.suppressed],
+            "stale_baseline": list(self.stale_baseline),
+        }
+
+
+def lint_jaxpr(closed_jaxpr, rules: Sequence[Rule],
+               bindings: Optional[Mapping[str, int]] = None,
+               name: str = "<jaxpr>") -> Report:
+    """Run ``rules`` over an already-traced (Closed)Jaxpr."""
+    report = Report(name=name, n_eqns=sum(1 for _ in
+                                          iter_eqns(closed_jaxpr)))
+    for rule in rules:
+        ctx = RuleContext(bindings=dict(bindings or {}))
+        report.findings.extend(rule.analyze(closed_jaxpr, ctx))
+    return report
+
+
+def _is_traceable(x: Any) -> bool:
+    """Leaves that become jaxpr inputs; everything else stays static and
+    is closed over (configs, callables, strings, python scalars)."""
+    return (isinstance(x, (jax.Array, np.ndarray, jax.ShapeDtypeStruct))
+            or (hasattr(x, "shape") and hasattr(x, "dtype")))
+
+
+def trace(fn: Callable, *args, **kwargs):
+    """``jax.make_jaxpr`` over the *array-like* leaves of (args, kwargs).
+
+    ShapeDtypeStructs are accepted anywhere an array is — so a million-
+    client round can be traced from a state skeleton built with
+    ``jax.eval_shape`` without ever allocating it.  Non-array leaves
+    (FedConfig, loss callables, strings) are closed over as statics.
+    """
+    flat, treedef = jax.tree_util.tree_flatten((args, kwargs))
+    dyn_idx = [i for i, leaf in enumerate(flat) if _is_traceable(leaf)]
+    statics = {i: leaf for i, leaf in enumerate(flat)
+               if i not in set(dyn_idx)}
+
+    def run(*dyn_leaves):
+        leaves = list(flat)
+        for i, leaf in zip(dyn_idx, dyn_leaves):
+            leaves[i] = leaf
+        for i, leaf in statics.items():
+            leaves[i] = leaf
+        a, k = jax.tree_util.tree_unflatten(treedef, leaves)
+        return fn(*a, **k)
+
+    return jax.make_jaxpr(run)(*[flat[i] for i in dyn_idx])
+
+
+def verify(fn: Callable, *args, rules: Sequence[Rule],
+           bindings: Optional[Mapping[str, int]] = None,
+           name: Optional[str] = None, **kwargs) -> Report:
+    """Trace ``fn`` abstractly and lint the resulting jaxpr.
+
+    Returns the :class:`Report`; call ``.raise_if_failed()`` to turn
+    errors into a :class:`ContractViolation`.
+    """
+    closed = trace(fn, *args, **kwargs)
+    return lint_jaxpr(closed, rules, bindings,
+                      name=name or getattr(fn, "__name__", "<fn>"))
+
+
+def apply_baseline(report: Report,
+                   baseline: Mapping[str, str]) -> Report:
+    """Move baselined findings (fingerprint -> justification) into
+    ``report.suppressed``; record entries that no longer fire as stale."""
+    remaining: List[Finding] = []
+    hit = set()
+    for f in report.findings:
+        if f.fingerprint in baseline:
+            report.suppressed.append((f, baseline[f.fingerprint]))
+            hit.add(f.fingerprint)
+        else:
+            remaining.append(f)
+    report.findings = remaining
+    report.stale_baseline.extend(fp for fp in baseline if fp not in hit)
+    return report
+
+
+def contract_enabled(enabled: Optional[bool] = None) -> bool:
+    if enabled is not None:
+        return enabled
+    return os.environ.get(ENV_FLAG, "") not in ("", "0", "false", "off")
+
+
+def _abstract_signature(args, kwargs) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten((args, kwargs))
+    sig = []
+    for leaf in flat:
+        if _is_traceable(leaf):
+            sig.append(("a", tuple(leaf.shape), str(leaf.dtype)))
+        else:
+            try:
+                hash(leaf)
+                sig.append(("s", leaf))
+            except TypeError:
+                sig.append(("r", repr(leaf)))
+    return treedef, tuple(sig)
+
+
+def contract(*, rules: Union[Sequence[Rule],
+                             Callable[[Mapping[str, int]], Sequence[Rule]]],
+             bindings: Optional[Union[Mapping[str, int],
+                                      Callable[..., Mapping[str, int]]]]
+             = None,
+             enabled: Optional[bool] = None,
+             name: Optional[str] = None) -> Callable:
+    """Decorator: lint the wrapped function's jaxpr once per abstract
+    signature before running it.
+
+    Off by default (tracing twice per new signature is not free at
+    C=1M); enable fleet-wide with ``REPRO_FEDLINT=1`` or per-decoration
+    with ``enabled=True``.  ``bindings`` may be a dict or a callable
+    ``(*args, **kwargs) -> dict`` evaluated at call time — that is how
+    the sparse round binds ``C`` only when it is genuinely running a
+    sub-fleet block (the dense oracle legitimately delegates full-width
+    blocks, where a (C, D) gather *is* the working set).  ``rules``
+    likewise may be a callable of the bindings.  The undecorated
+    function stays reachable as ``.__wrapped__``, and
+    ``wrapped.fedlint(*args, **kwargs)`` runs the check explicitly and
+    returns the report regardless of the env flag.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        checked: Dict[Any, bool] = {}
+
+        def run_check(args, kwargs) -> Report:
+            b = (bindings(*args, **kwargs) if callable(bindings)
+                 else dict(bindings or {}))
+            rs = rules(b) if callable(rules) else rules
+            return verify(fn, *args, rules=rs, bindings=b,
+                          name=name or fn.__name__, **kwargs)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            if contract_enabled(enabled):
+                try:
+                    sig = _abstract_signature(args, kwargs)
+                except Exception:
+                    sig = None
+                if sig is None or sig not in checked:
+                    run_check(args, kwargs).raise_if_failed()
+                    if sig is not None:
+                        checked[sig] = True
+            return fn(*args, **kwargs)
+
+        wrapper.fedlint = lambda *a, **k: run_check(a, k)
+        return wrapper
+
+    return deco

@@ -1,1 +1,3 @@
-from repro.checkpoint.checkpointer import save_pytree, restore_pytree, Checkpointer  # noqa: F401
+from repro.checkpoint.checkpointer import Checkpointer, restore_pytree, save_pytree
+
+__all__ = ["Checkpointer", "restore_pytree", "save_pytree"]

@@ -4,15 +4,35 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-from repro.configs.base import (ATTN, FFN_DENSE, FFN_MOE, FFN_NONE, HYMBA,
-                                INPUT_SHAPES, MAMBA, MLSTM, SLSTM, SWA,
-                                ArchConfig, FedConfig, InputShape, MoEConfig)
-from repro.configs import (gemma_7b, granite_moe_3b_a800m, hymba_1_5b,
-                           llama3_405b, llava_next_mistral_7b, olmoe_1b_7b,
-                           phi3_medium_14b, seamless_m4t_medium, smollm_360m,
-                           xlstm_1_3b)
-from repro.configs.forecast import (GRU_H1, LSTM_H1, MLP_H1, MLP_H24,
-                                    ForecastConfig)
+from repro.configs import (
+    gemma_7b,
+    granite_moe_3b_a800m,
+    hymba_1_5b,
+    llama3_405b,
+    llava_next_mistral_7b,
+    olmoe_1b_7b,
+    phi3_medium_14b,
+    seamless_m4t_medium,
+    smollm_360m,
+    xlstm_1_3b,
+)
+from repro.configs.base import (
+    ATTN,
+    FFN_DENSE,
+    FFN_MOE,
+    FFN_NONE,
+    HYMBA,
+    INPUT_SHAPES,
+    MAMBA,
+    MLSTM,
+    SLSTM,
+    SWA,
+    ArchConfig,
+    FedConfig,
+    InputShape,
+    MoEConfig,
+)
+from repro.configs.forecast import GRU_H1, LSTM_H1, MLP_H1, MLP_H24, ForecastConfig
 
 ARCHS: Dict[str, ArchConfig] = {
     c.name: c

@@ -15,8 +15,7 @@ variants used by CPU tests.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Block kinds that can appear in a stack.
@@ -252,6 +251,21 @@ class FedConfig:
     compensation_beta: float = 0.9         # EWMA rate of the momentum proxy
     compensation_scale: float = 1.0        # scale on the Taylor term
     compensation_clip: float = 10.0        # max extrapolated rounds
+    # how the Taylor term is scaled:
+    #   global:     the flat compensation_scale knob alone (bit-compatible
+    #               default — the code path is untouched)
+    #   per_client: additionally damp each client's extrapolation by
+    #               ref / (rms_i + ref), where rms_i is the rms magnitude
+    #               of client i's OWN comp EWMA across all leaves — a
+    #               large/noisy momentum proxy means the first-order
+    #               direction is less trustworthy, so that client's Taylor
+    #               step shrinks smoothly toward 0 while quiet clients
+    #               keep the full global scale.  The damping is row-local
+    #               (client i's scale reads only row i of comp), so
+    #               dense<->sparse bit-parity is preserved by construction
+    #               (pinned in the equivalence grid).
+    compensation_scale_mode: str = "global"    # global | per_client
+    compensation_ref: float = 1.0              # rms damping reference
     # which client messages the Eq. (20) server update consumes:
     #   all:    the server keeps every client's last-received w_i and the
     #           sign sum runs over all C of them (stale frozen params

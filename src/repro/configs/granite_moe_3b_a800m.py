@@ -1,5 +1,5 @@
 """Granite-3.0 MoE 3B-a800m — 40 experts, top-8. [hf:ibm-granite/granite-3.0-1b-a400m-base]"""
-from repro.configs.base import ArchConfig, FFN_MOE, MoEConfig
+from repro.configs.base import FFN_MOE, ArchConfig, MoEConfig
 
 CONFIG = ArchConfig(
     name="granite-moe-3b-a800m",

@@ -1,5 +1,5 @@
 """Hymba-1.5B — parallel attention + mamba heads in every block. [arXiv:2411.13676]"""
-from repro.configs.base import ArchConfig, HYMBA
+from repro.configs.base import HYMBA, ArchConfig
 
 CONFIG = ArchConfig(
     name="hymba-1.5b",

@@ -1,5 +1,5 @@
 """OLMoE-1B-7B — 64 experts, top-8. [arXiv:2409.02060]"""
-from repro.configs.base import ArchConfig, FFN_MOE, MoEConfig
+from repro.configs.base import FFN_MOE, ArchConfig, MoEConfig
 
 CONFIG = ArchConfig(
     name="olmoe-1b-7b",

@@ -1,5 +1,5 @@
 """xLSTM-1.3B — sLSTM + mLSTM blocks, no FFN (d_ff=0). [arXiv:2405.04517]"""
-from repro.configs.base import ArchConfig, FFN_NONE, MLSTM, SLSTM
+from repro.configs.base import FFN_NONE, MLSTM, SLSTM, ArchConfig
 
 # xLSTM[7:1]: one sLSTM block per 8 layers, the rest mLSTM.
 _PATTERN = tuple(SLSTM if (i % 8 == 7) else MLSTM for i in range(48))

@@ -1,9 +1,40 @@
 """The paper's primary contribution: the BAFDP algorithm and its
 supporting pieces (DRO, LDP, Byzantine attacks, robust aggregation,
 async simulation)."""
-from repro.core.fed_state import FedState, init_fed_state  # noqa: F401
-from repro.core.bafdp import bafdp_round, make_round_fn  # noqa: F401
-from repro.core.schedule import (  # noqa: F401
-    AdaptiveQuorum, AgeAwareSelection, AggregationTrigger, FastestSelection,
-    FedBuffTrigger, FederatedRun, FixedQuorum, QuorumPolicy, QuorumTrigger,
-    Schedule, SelectionPolicy, SyncTrigger, build_schedule)
+from repro.core.bafdp import bafdp_round, make_round_fn
+from repro.core.fed_state import FedState, init_fed_state
+from repro.core.schedule import (
+    AdaptiveQuorum,
+    AgeAwareSelection,
+    AggregationTrigger,
+    FastestSelection,
+    FedBuffTrigger,
+    FederatedRun,
+    FixedQuorum,
+    QuorumPolicy,
+    QuorumTrigger,
+    Schedule,
+    SelectionPolicy,
+    SyncTrigger,
+    build_schedule,
+)
+
+__all__ = [
+    "AdaptiveQuorum",
+    "AgeAwareSelection",
+    "AggregationTrigger",
+    "FastestSelection",
+    "FedBuffTrigger",
+    "FederatedRun",
+    "FedState",
+    "FixedQuorum",
+    "QuorumPolicy",
+    "QuorumTrigger",
+    "Schedule",
+    "SelectionPolicy",
+    "SyncTrigger",
+    "bafdp_round",
+    "build_schedule",
+    "init_fed_state",
+    "make_round_fn",
+]

@@ -22,7 +22,6 @@ widths.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax

@@ -51,13 +51,22 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import (
+    AccumulationDtypeRule,
+    MemoryContractRule,
+    contract as fedlint_contract,
+)
 from repro.configs.base import FedConfig
 from repro.core import aggregators as agg_lib
 from repro.core import byzantine as byz_lib
 from repro.core import dro
-from repro.core.fed_state import (FedState, consensus_gap, gather_clients,
-                                  scatter_clients)
-from repro.core.privacy import eps_feasible, sigma_for_eps
+from repro.core.fed_state import (
+    FedState,
+    consensus_gap,
+    gather_clients,
+    scatter_clients,
+)
+from repro.core.privacy import eps_feasible
 from repro.distributed import collectives
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -118,9 +127,33 @@ def compensate_stale(W_msg: Any, comp: Any, age, fed: FedConfig) -> Any:
         w~_i = w_i - alpha_w * compensation_scale * min(d, clip) * comp_i
 
     ``age`` is (C,); clients with age 0 are untouched.  Returns fp32 leaves.
+
+    ``fed.compensation_scale_mode="per_client"`` additionally damps each
+    row's extrapolation by ``ref / (rms_i + ref)`` where ``rms_i`` is the
+    rms magnitude of that row's ``comp`` across all leaves: a client whose
+    momentum proxy is large or noisy extrapolates less (its first-order
+    direction is less trustworthy), a quiet client keeps the full global
+    scale.  The damping reads only row i of ``comp`` — row-local, so the
+    masked dense block and the gathered sparse block compute bit-identical
+    scales (the dense<->sparse parity contract).
     """
     a = (jnp.minimum(age.astype(jnp.float32), fed.compensation_clip)
          * fed.alpha_w * fed.compensation_scale)
+    if fed.compensation_scale_mode == "per_client":
+        R = age.shape[0]
+        sq = jnp.zeros((R,), jnp.float32)
+        n_inner = 0
+        for c in jax.tree.leaves(comp):
+            cf = c.astype(jnp.float32).reshape(R, -1)
+            sq = sq + jnp.sum(jnp.square(cf), axis=1)
+            n_inner += cf.shape[1]
+        rms = jnp.sqrt(sq / float(max(n_inner, 1)))
+        a = a * (fed.compensation_ref / (rms + fed.compensation_ref))
+    elif fed.compensation_scale_mode != "global":
+        raise ValueError(
+            f"unknown compensation_scale_mode: "
+            f"{fed.compensation_scale_mode!r} "
+            "(expected 'global' or 'per_client')")
 
     def f(w, c):
         al = a.reshape((-1,) + (1,) * (w.ndim - 1))
@@ -568,6 +601,31 @@ def bafdp_round(state: FedState, batch: Any, key, *, local_loss: LocalLoss,
     return new_state, metrics
 
 
+def _sparse_round_bindings(state, batch, key, **kw):
+    """Call-time dimension bindings for the sparse round's fedlint
+    contract.  The dense "active"-scope oracle legitimately delegates the
+    FULL-width block here (idx = arange(C)), where a (C, D) gather IS the
+    working set — so ``C`` is bound only for genuine sub-fleet blocks."""
+    C = kw["byz_mask"].shape[0]
+    idx = kw["idx"]
+    S = idx.shape[0] if hasattr(idx, "shape") else len(idx)
+    return {"C": int(C)} if S < C else {}
+
+
+def _sparse_round_rules(bindings):
+    rules = [AccumulationDtypeRule()]
+    if "C" in bindings:
+        # the O(S) contract: no dense (C, D) intermediate; the state
+        # write-back scatters are the sanctioned O(C)-touching producers,
+        # and min_inner_elems=3 exempts the (C, 2) key-split words
+        rules.append(MemoryContractRule(
+            "C", allow_primitives=("scatter", "scatter-add"),
+            min_inner_elems=3))
+    return rules
+
+
+@fedlint_contract(rules=_sparse_round_rules, bindings=_sparse_round_bindings,
+                  name="bafdp_round_sparse")
 def bafdp_round_sparse(state: FedState, batch: Any, key, *,
                        local_loss: LocalLoss, fed: FedConfig, c3: float,
                        n_samples: int, d_dim: int, byz_mask: jnp.ndarray,

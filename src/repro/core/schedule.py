@@ -46,8 +46,17 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Callable, Dict, Iterator, List, Optional, Protocol, \
-    Tuple, runtime_checkable
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Iterator,
+    List,
+    Optional,
+    Protocol,
+    Tuple,
+    runtime_checkable,
+)
 
 import numpy as np
 

@@ -1,2 +1,4 @@
-from repro.data.synthetic_traffic import DATASETS, make_dataset  # noqa: F401
-from repro.data.windowing import build_windows, FeatureScaler  # noqa: F401
+from repro.data.synthetic_traffic import DATASETS, make_dataset
+from repro.data.windowing import FeatureScaler, build_windows
+
+__all__ = ["DATASETS", "FeatureScaler", "build_windows", "make_dataset"]

@@ -1,5 +1,20 @@
-from repro.distributed.sharding import (  # noqa: F401
-    ShardingPlan, make_plan, named, greedy_spec)
-from repro.distributed.collectives import (  # noqa: F401
-    SignMessage, decode_sign_message, encode_sign_message, message_bytes,
-    sign_sum)
+from repro.distributed.collectives import (
+    SignMessage,
+    decode_sign_message,
+    encode_sign_message,
+    message_bytes,
+    sign_sum,
+)
+from repro.distributed.sharding import ShardingPlan, greedy_spec, make_plan, named
+
+__all__ = [
+    "ShardingPlan",
+    "SignMessage",
+    "decode_sign_message",
+    "encode_sign_message",
+    "greedy_spec",
+    "make_plan",
+    "message_bytes",
+    "named",
+    "sign_sum",
+]

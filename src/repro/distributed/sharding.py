@@ -18,13 +18,12 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, FedConfig
+from repro.configs.base import ArchConfig
 
 
 def named(mesh: Mesh, spec: P) -> NamedSharding:

@@ -22,6 +22,7 @@ def main() -> int:
     args = ap.parse_args()
 
     import jax
+
     from repro.configs import get_arch, reduce_for_smoke
     from repro.models import transformer as tr
     from repro.serving import ServeEngine, ServeRequest

@@ -13,7 +13,6 @@ never materialize during the dry-run (jax.eval_shape).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -26,7 +25,7 @@ from repro.core import bafdp as bafdp_lib
 from repro.core import byzantine as byz_lib
 from repro.core.fed_state import FedState
 from repro.core.privacy import gaussian_c3
-from repro.distributed.sharding import ShardingPlan, make_plan
+from repro.distributed.sharding import make_plan
 from repro.models import transformer as tr
 from repro.models.layers import dtype_of
 

@@ -49,6 +49,7 @@ def main() -> int:
 
     import jax
     import jax.numpy as jnp
+
     from repro.checkpoint import Checkpointer
     from repro.configs import INPUT_SHAPES, get_arch, reduce_for_smoke
     from repro.core.fed_state import init_fed_state

@@ -7,7 +7,7 @@ the baseline artifact is the measurement of the hypothesis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.configs.base import ArchConfig, FedConfig
 

@@ -1,1 +1,3 @@
-from repro.models import transformer, forecasting  # noqa: F401
+from repro.models import forecasting, transformer
+
+__all__ = ["forecasting", "transformer"]

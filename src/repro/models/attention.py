@@ -7,7 +7,7 @@ against); ``impl='pallas'`` routes the core contraction through
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -133,8 +133,9 @@ def _seq_par_chunks(one, qc, k, v, n_chunks: int, seq_shards: int):
     (EXPERIMENTS Section Perf, refuted iteration).  shard_map makes the
     placement explicit: each model-axis member owns n_chunks/16 query
     chunks; k/v arrive replicated over 'model'."""
-    from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
     from repro.distributed.context import get_mesh
 
     mesh = get_mesh()

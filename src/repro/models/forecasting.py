@@ -7,8 +7,6 @@ All take x: (B, d_x) -> y_hat: (B, H).
 """
 from __future__ import annotations
 
-from typing import Dict
-
 import jax
 import jax.numpy as jnp
 

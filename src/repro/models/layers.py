@@ -6,7 +6,6 @@ dicts of jnp arrays), ``apply``-style functions consume it.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ The XLA forms here are the oracles for the ``ssm_scan`` Pallas kernel.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,21 +15,37 @@ Public API:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import (ATTN, FFN_DENSE, FFN_MOE, FFN_NONE, HYMBA,
-                                MAMBA, MLSTM, SLSTM, SWA, ArchConfig)
+from repro.configs.base import (
+    ATTN,
+    FFN_DENSE,
+    FFN_MOE,
+    HYMBA,
+    MAMBA,
+    MLSTM,
+    SLSTM,
+    SWA,
+    ArchConfig,
+)
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
-from repro.models.layers import (chunked_ce_from_hidden, cross_entropy,
-                                 dense_init, dtype_of, embed, ffn,
-                                 init_embedding, init_ffn, init_rmsnorm,
-                                 lm_logits, rmsnorm)
+from repro.models.layers import (
+    chunked_ce_from_hidden,
+    dense_init,
+    dtype_of,
+    embed,
+    ffn,
+    init_embedding,
+    init_ffn,
+    init_rmsnorm,
+    lm_logits,
+    rmsnorm,
+)
 
 
 # ---------------------------------------------------------------------------

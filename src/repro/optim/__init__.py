@@ -1,2 +1,11 @@
-from repro.optim.optimizers import adam, sgd, apply_updates, clip_by_global_norm  # noqa: F401
-from repro.optim.schedules import cosine_schedule, warmup_linear  # noqa: F401
+from repro.optim.optimizers import adam, apply_updates, clip_by_global_norm, sgd
+from repro.optim.schedules import cosine_schedule, warmup_linear
+
+__all__ = [
+    "adam",
+    "apply_updates",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "sgd",
+    "warmup_linear",
+]

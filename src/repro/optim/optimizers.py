@@ -5,8 +5,7 @@ updates, state = opt.update(grads, state, params); params = apply_updates(...).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Union
+from typing import Any, Callable, NamedTuple, Union
 
 import jax
 import jax.numpy as jnp

@@ -1,1 +1,3 @@
-from repro.roofline.analysis import RooflineReport, analyze_compiled, V5E  # noqa: F401
+from repro.roofline.analysis import V5E, RooflineReport, analyze_compiled
+
+__all__ = ["V5E", "RooflineReport", "analyze_compiled"]

@@ -1,1 +1,3 @@
-from repro.serving.engine import ServeEngine, ServeRequest  # noqa: F401
+from repro.serving.engine import ServeEngine, ServeRequest
+
+__all__ = ["ServeEngine", "ServeRequest"]

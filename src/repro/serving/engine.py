@@ -8,7 +8,7 @@ with request management for the example apps.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp

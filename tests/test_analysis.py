@@ -1,0 +1,322 @@
+"""fedlint (repro.analysis) suite: traversal, the five built-in rules
+against their seeded-violation fixtures, abstract-shape verify, the
+contract decorator (env gate, memoization, explicit ``.fedlint``),
+baseline suppression + staleness, and the CLI.
+
+The fixtures in ``repro.analysis.fixtures`` are the load-bearing part:
+every rule must CATCH its deliberately broken reference implementation
+and PASS the clean twin, so a traversal or rule regression cannot land
+quietly.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (ContractViolation, F64LeakageRule, Finding,
+                            HostSyncRule, MemoryContractRule,
+                            RngDisciplineRule, apply_baseline, contract,
+                            default_rules, format_path, iter_eqns,
+                            iter_eqns_with_path, lint_jaxpr, trace, verify)
+from repro.analysis.fixtures import (FIXTURES, densifying_block_fold,
+                                     run_selftest)
+
+
+# ---------------------------------------------------------------------------
+# traversal
+# ---------------------------------------------------------------------------
+def test_iter_eqns_recurses_into_scan_and_pjit():
+    def fn(x):
+        def body(c, v):
+            return c + jnp.sin(v), c
+        out, _ = jax.lax.scan(body, jnp.zeros(()), x)
+        return out + jax.jit(jnp.cos)(out)
+
+    jaxpr = jax.make_jaxpr(fn)(jnp.ones((4,)))
+    prims = {e.primitive.name for e in iter_eqns(jaxpr)}
+    assert "scan" in prims
+    assert "sin" in prims          # only reachable inside the scan body
+    assert "cos" in prims          # only reachable inside the pjit call
+
+    paths = {format_path(p) for e, p in iter_eqns_with_path(jaxpr)
+             if e.primitive.name == "sin"}
+    assert any("scan" in p for p in paths), paths
+
+
+# ---------------------------------------------------------------------------
+# the five rules vs their seeded fixtures
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fx", FIXTURES, ids=lambda fx: fx.name)
+def test_rule_catches_seeded_violation(fx):
+    rep = lint_jaxpr(fx.trace_broken(), [fx.make_rule()], fx.bindings,
+                     name=f"{fx.name}/broken")
+    assert any(f.rule == fx.rule_id for f in rep.findings), (
+        f"rule {fx.rule_id} missed its seeded violation")
+
+
+@pytest.mark.parametrize("fx", FIXTURES, ids=lambda fx: fx.name)
+def test_rule_passes_clean_twin(fx):
+    rep = lint_jaxpr(fx.trace_clean(), [fx.make_rule()], fx.bindings,
+                     name=f"{fx.name}/clean")
+    errs = [f for f in rep.findings
+            if f.rule == fx.rule_id and f.severity == "error"]
+    assert not errs, "\n".join(f.format() for f in errs)
+
+
+def test_selftest_is_green():
+    assert run_selftest() == []
+
+
+def test_rng_rule_flags_duplicate_fold_in():
+    def fn(key):
+        k1 = jax.random.fold_in(key, 7)
+        k2 = jax.random.fold_in(key, 7)      # identical derivation
+        return (jax.random.normal(k1, (3,)), jax.random.normal(k2, (3,)))
+
+    rep = verify(fn, jax.ShapeDtypeStruct((2,), jnp.uint32),
+                 rules=[RngDisciplineRule()])
+    assert any("fold_in" in f.message and f.severity == "error"
+               for f in rep.findings), rep.format_human()
+
+
+def test_rng_rule_warns_on_mixed_bits_and_fold():
+    def fn(key):
+        x = jax.random.normal(key, (3,))               # bits from key
+        k2 = jax.random.fold_in(key, 1)                # AND derive from it
+        return x + jax.random.normal(k2, (3,))
+
+    rep = verify(fn, jax.ShapeDtypeStruct((2,), jnp.uint32),
+                 rules=[RngDisciplineRule()])
+    assert any(f.severity == "warning" for f in rep.findings)
+    assert rep.ok                                      # warnings don't fail
+
+
+def test_memory_rule_skips_when_dim_unbound():
+    jaxpr = jax.make_jaxpr(densifying_block_fold)(
+        jax.ShapeDtypeStruct((4096, 64), jnp.float32),
+        jax.ShapeDtypeStruct((8,), jnp.int32))
+    rule = MemoryContractRule("C", min_inner_elems=3)
+    assert lint_jaxpr(jaxpr, [rule], bindings={}).ok          # unbound: no-op
+    assert not lint_jaxpr(jaxpr, [rule], bindings={"C": 4096}).ok
+
+
+def test_memory_rule_byte_budget_needs_no_binding():
+    jaxpr = jax.make_jaxpr(lambda x: x @ x.T)(
+        jax.ShapeDtypeStruct((512, 512), jnp.float32))
+    rep = lint_jaxpr(jaxpr, [MemoryContractRule("C", max_bytes=1 << 16)],
+                     bindings={})
+    assert any("byte" in f.message for f in rep.findings)
+
+
+def test_finding_path_reports_enclosing_loop():
+    def fn(x):
+        def body(c, v):
+            jax.debug.print("v={v}", v=v)
+            return c + v, v
+        out, _ = jax.lax.scan(body, jnp.zeros(()), x)
+        return out
+
+    rep = verify(fn, jax.ShapeDtypeStruct((4,), jnp.float32),
+                 rules=[HostSyncRule()])
+    assert rep.findings and "scan" in rep.findings[0].path
+
+
+# ---------------------------------------------------------------------------
+# verify over abstract shapes
+# ---------------------------------------------------------------------------
+def test_verify_traces_abstract_shapes_without_allocating():
+    C = 50_000_000                      # 200 GB if this were materialized
+    rep = verify(densifying_block_fold,
+                 jax.ShapeDtypeStruct((C, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((8,), jnp.int32),
+                 rules=[MemoryContractRule("C", min_inner_elems=3)],
+                 bindings={"C": C})
+    assert not rep.ok
+    assert f"C={C}" in rep.findings[0].message
+
+
+def test_trace_closes_over_non_array_statics():
+    cfg = {"scale": 3.0, "op": "mul"}
+
+    def fn(x, cfg):
+        return x * cfg["scale"] if cfg["op"] == "mul" else x
+
+    closed = trace(fn, jnp.ones((4,)), cfg)
+    assert len(closed.jaxpr.invars) == 1               # cfg stayed static
+
+
+def test_default_rules_pass_on_clean_fn():
+    def fn(key, x):
+        k1, k2 = jax.random.split(key)
+        return x + jax.random.normal(k1, x.shape), k2
+
+    rep = verify(fn, jax.ShapeDtypeStruct((2,), jnp.uint32),
+                 jax.ShapeDtypeStruct((8,), jnp.float32),
+                 rules=default_rules())
+    assert rep.ok and not rep.findings, rep.format_human()
+
+
+# ---------------------------------------------------------------------------
+# contract decorator
+# ---------------------------------------------------------------------------
+def _mem_rules():
+    return [MemoryContractRule("C", min_inner_elems=3)]
+
+
+def test_contract_enabled_raises_on_violation():
+    @contract(rules=_mem_rules(), bindings={"C": 64}, enabled=True)
+    def bad(W, idx):
+        return densifying_block_fold(W, idx)
+
+    with pytest.raises(ContractViolation):
+        bad(jnp.ones((64, 8)), jnp.arange(4))
+    # ContractViolation is an AssertionError (harness compatibility)
+    with pytest.raises(AssertionError):
+        bad.fedlint(jnp.ones((64, 8)), jnp.arange(4)).raise_if_failed()
+
+
+def test_contract_off_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_FEDLINT", raising=False)
+
+    @contract(rules=_mem_rules(), bindings={"C": 64})
+    def bad(W, idx):
+        return densifying_block_fold(W, idx)
+
+    out = bad(jnp.ones((64, 8)), jnp.arange(4))        # no raise
+    np.testing.assert_allclose(np.asarray(out), 4.0 * np.ones((8,)))
+
+
+def test_contract_env_flag_enables(monkeypatch):
+    monkeypatch.setenv("REPRO_FEDLINT", "1")
+
+    @contract(rules=_mem_rules(), bindings={"C": 64})
+    def bad(W, idx):
+        return densifying_block_fold(W, idx)
+
+    with pytest.raises(ContractViolation):
+        bad(jnp.ones((64, 8)), jnp.arange(4))
+
+
+def test_contract_checks_once_per_abstract_signature(monkeypatch):
+    monkeypatch.setenv("REPRO_FEDLINT", "1")
+    calls = {"n": 0}
+
+    def counting_bindings(*args, **kwargs):
+        calls["n"] += 1
+        return {}
+
+    @contract(rules=lambda b: [], bindings=counting_bindings)
+    def ok(x):
+        return x * 2
+
+    ok(jnp.ones((4,)))
+    ok(jnp.zeros((4,)))                 # same signature: memoized
+    assert calls["n"] == 1
+    ok(jnp.ones((5,)))                  # new shape: re-checked
+    assert calls["n"] == 2
+
+
+def test_contract_callable_bindings_gate_the_rule(monkeypatch):
+    monkeypatch.setenv("REPRO_FEDLINT", "1")
+
+    @contract(rules=lambda b: _mem_rules() if "C" in b else [],
+              bindings=lambda W, idx: {"C": W.shape[0]}
+              if idx.shape[0] < W.shape[0] else {})
+    def fold(W, idx):
+        return densifying_block_fold(W, idx)
+
+    # full-width call: dim unbound, densifying is sanctioned
+    full = fold(jnp.ones((8, 8)), jnp.arange(8))
+    np.testing.assert_allclose(np.asarray(full), 8.0 * np.ones((8,)))
+    # sub-fleet call: bound, the (C, D) intermediate is a violation
+    with pytest.raises(ContractViolation):
+        fold(jnp.ones((64, 8)), jnp.arange(4))
+
+
+def test_sparse_round_contract_is_clean():
+    """The real bafdp_round_sparse's decorated contract (``.fedlint``)
+    runs green on a gathered sub-fleet call — the O(S) memory contract
+    and the accumulation-dtype rule hold on the shipping round."""
+    from repro.configs import FedConfig
+    from repro.core import bafdp, init_fed_state
+
+    C_loc, S, D = 64, 4, 16
+    fed = FedConfig(n_clients=C_loc, active_frac=S / C_loc,
+                    consensus_scope="active", omega_optimizer="sgd")
+    state = init_fed_state(
+        jax.random.PRNGKey(0),
+        lambda k: {"w": 0.01 * jax.random.normal(k, (D,))}, fed,
+        n_clients=C_loc)
+
+    def local_loss(p, batch, k, eps):
+        x, y = batch
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    Xg = jax.random.normal(jax.random.PRNGKey(1), (S, 4, D))
+    Yg = jnp.sum(Xg[..., :2], -1) * 0.3
+    rep = bafdp.bafdp_round_sparse.fedlint(
+        state, (Xg, Yg), jax.random.PRNGKey(2),
+        local_loss=local_loss, fed=fed, c3=1.0, n_samples=100, d_dim=D,
+        byz_mask=jnp.zeros((C_loc,), bool),
+        idx=jnp.arange(S, dtype=jnp.int32))
+    assert rep.ok, rep.format_human()
+
+
+# ---------------------------------------------------------------------------
+# baseline suppression
+# ---------------------------------------------------------------------------
+def test_baseline_suppresses_and_flags_stale():
+    fx = FIXTURES[0]
+    rep = lint_jaxpr(fx.trace_broken(), [fx.make_rule()], fx.bindings)
+    assert not rep.ok
+    fp = rep.findings[0].fingerprint
+    rep2 = lint_jaxpr(fx.trace_broken(), [fx.make_rule()], fx.bindings)
+    apply_baseline(rep2, {fp: "known, tracked in #123",
+                          "bogus|fp|never|fires": "dead entry"})
+    assert rep2.ok
+    assert [r for _, r in rep2.suppressed] == ["known, tracked in #123"]
+    assert rep2.stale_baseline == ["bogus|fp|never|fires"]
+    d = rep2.to_dict()
+    assert d["ok"] and d["suppressed"][0]["fingerprint"] == fp
+
+
+def test_fingerprint_is_deterministic():
+    f = Finding(rule="r", severity="error", message="m", path="p",
+                primitive="q", detail="d")
+    assert f.fingerprint == "r|q|p|d"
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_selftest_passes():
+    from repro.analysis.cli import main
+    assert main(["--selftest"]) == 0
+
+
+def test_cli_list_names_every_entry(capsys):
+    from repro.analysis.cli import main
+    assert main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name in ("dense-round-all", "sparse-round-c1m",
+                 "sign-consensus-streamed-int8"):
+        assert name in out
+
+
+def test_cli_single_entry_json(tmp_path):
+    from repro.analysis.cli import main
+    out = tmp_path / "report.json"
+    assert main(["--only", "sign-consensus-f32", "--json", str(out)]) == 0
+    payload = json.loads(out.read_text())
+    assert payload["ok"]
+    assert payload["entries"][0]["name"] == "sign-consensus-f32"
+
+
+@pytest.mark.slow
+def test_cli_full_manifest_clean():
+    """The CI gate, in-process: every manifest entrypoint lints clean
+    (modulo the committed baseline)."""
+    from repro.analysis.cli import main
+    assert main([]) == 0

@@ -189,20 +189,15 @@ def test_sign_consensus_streaming_jaxpr_holds_no_full_block():
     phi = jnp.zeros((D,))
 
     def offenders(streaming):
-        from test_sparse_round import _iter_eqns
+        from repro.analysis import MemoryContractRule, lint_jaxpr
         jaxpr = jax.make_jaxpr(
             lambda z, X, p, w: kops.sign_consensus(
                 z, X, p, w, 0.01, 0.01, message="int8", n_total=64,
                 streaming=streaming, chunk_size=4))(z, X, phi, w)
-        out = []
-        for eqn in _iter_eqns(jaxpr.jaxpr):
-            for var in eqn.outvars:
-                aval = getattr(var, "aval", None)
-                shape = getattr(aval, "shape", ())
-                if len(shape) >= 2 and shape[0] == S \
-                        and int(np.prod(shape[1:])) >= D:
-                    out.append((eqn.primitive.name, shape))
-        return out
+        report = lint_jaxpr(
+            jaxpr, [MemoryContractRule("S_max", min_inner_elems=D)],
+            bindings={"S_max": S}, name="sign-consensus-stream")
+        return [(f.primitive, f.detail) for f in report.findings]
 
     assert offenders(False), \
         "control failed: materialized int8 should emit the (S, D) payload"

@@ -33,6 +33,7 @@ import numpy as np
 import pytest
 
 from conftest import given, settings, st   # hypothesis or graceful-skip stubs
+from repro.analysis import MemoryContractRule, lint_jaxpr
 from repro.configs import FedConfig, MLP_H1
 from repro.core import aggregators as agg_lib
 from repro.core import bafdp, init_fed_state
@@ -135,6 +136,14 @@ GRID += [dict(staleness_decay="poly", staleness_compensation="taylor",
          for m in ("f32", "int8")
          for dm in ("f32", "int8")
          for cs in (2, 3)]
+# per-client adaptive compensation scale: the rms damping is ROW-LOCAL
+# (each row's factor depends only on that row's comp leaves), so the
+# masked dense block and the gathered sparse block compute identical
+# per-client factors — bit-parity holds with no new mechanism
+GRID += [dict(staleness_decay=d, staleness_compensation="taylor",
+              sign_message=m, omega_optimizer="sgd",
+              compensation_scale_mode="per_client")
+         for d in ("constant", "poly") for m in ("f32", "int8")]
 
 
 @pytest.mark.parametrize(
@@ -791,20 +800,6 @@ def test_gathered_specs_replicate_leading_dim():
 # ---------------------------------------------------------------------------
 # million-client round smoke (tier-1, wired into the CI fail-first gate)
 # ---------------------------------------------------------------------------
-def _iter_eqns(jaxpr):
-    """All eqns of a jaxpr, recursing into sub-jaxprs (pjit, scan, ...)."""
-    from jax.core import ClosedJaxpr, Jaxpr
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            vs = v if isinstance(v, (tuple, list)) else (v,)
-            for sub in vs:
-                if isinstance(sub, ClosedJaxpr):
-                    yield from _iter_eqns(sub.jaxpr)
-                elif isinstance(sub, Jaxpr):
-                    yield from _iter_eqns(sub)
-
-
 def test_million_client_round_smoke():
     """C=1_000_000, S=8, tiny model: one jitted bafdp_round_sparse step
     completes, and the jaxpr contains NO dense (C, D) compute — the only
@@ -842,17 +837,17 @@ def test_million_client_round_smoke():
     jaxpr = jax.make_jaxpr(
         lambda s, b, k, i, st, w: f(s, b, k, idx=i, stale=st, weight=w))(
         state, (Xg, Yg), key, idx, stale, weight)
-    offenders = []
-    for eqn in _iter_eqns(jaxpr.jaxpr):
-        for var in eqn.outvars:
-            aval = getattr(var, "aval", None)
-            shape = getattr(aval, "shape", ())
-            if len(shape) >= 2 and shape[0] == C_BIG \
-                    and int(np.prod(shape[1:])) > 2:
-                if eqn.primitive.name not in ("scatter", "scatter-add"):
-                    offenders.append((eqn.primitive.name, shape))
-    assert not offenders, (
-        f"dense (C, D) intermediates in the sparse round: {offenders}")
+    # the memory contract, as an analyzer rule: no eqn output may be a
+    # C-leading array with a nontrivial inner dim, except the state
+    # write-back scatters (min_inner_elems=3 exempts the (C, 2) key split)
+    report = lint_jaxpr(
+        jaxpr,
+        [MemoryContractRule("C", allow_primitives=("scatter", "scatter-add"),
+                            min_inner_elems=3)],
+        bindings={"C": C_BIG}, name="million-client-round")
+    assert report.ok, (
+        "dense (C, D) intermediates in the sparse round:\n"
+        + report.format_human())
 
     traces = {"n": 0}
 
@@ -917,14 +912,12 @@ def test_streaming_round_jaxpr_no_message_block():
             state, (Xg, Yg), jax.random.PRNGKey(2), idx)
 
     def int8_blocks(jaxpr):
-        found = []
-        for eqn in _iter_eqns(jaxpr.jaxpr):
-            for var in eqn.outvars:
-                aval = getattr(var, "aval", None)
-                if getattr(aval, "dtype", None) == jnp.int8 \
-                        and getattr(aval, "shape", ()) == (S, D):
-                    found.append((eqn.primitive.name, aval.shape))
-        return found
+        report = lint_jaxpr(
+            jaxpr,
+            [MemoryContractRule("S_max", dtypes=("int8",),
+                                min_inner_elems=D)],
+            bindings={"S_max": S}, name="streaming-round")
+        return report.findings
 
     materialized = int8_blocks(make({}))
     assert materialized, "control failed: the materialized round should " \
@@ -932,4 +925,66 @@ def test_streaming_round_jaxpr_no_message_block():
     streamed = int8_blocks(make(dict(consensus_streaming=True,
                                      consensus_chunk=3)))
     assert not streamed, (
-        f"(S_max, D) int8 message blocks on the streaming path: {streamed}")
+        "(S_max, D) int8 message blocks on the streaming path:\n"
+        + "\n".join(f.format() for f in streamed))
+
+
+# ---------------------------------------------------------------------------
+# per-client adaptive compensation scale (compensation_scale_mode)
+# ---------------------------------------------------------------------------
+def test_per_client_compensation_damps_by_row_rms():
+    """per_client mode multiplies each row's Taylor step by
+    ref / (rms_i + ref), rms_i over that row's comp leaves; global mode is
+    the undamped baseline."""
+    R = 4
+    fed_g = FedConfig(n_clients=R, staleness_compensation="taylor")
+    fed_p = dataclasses.replace(fed_g, compensation_scale_mode="per_client",
+                                compensation_ref=0.5)
+    rng = np.random.RandomState(3)
+    comp = {"w": jnp.asarray(rng.randn(R, 8).astype(np.float32)
+                             * np.asarray([0.1, 1.0, 5.0, 0.0])[:, None]),
+            "b": jnp.asarray(rng.randn(R).astype(np.float32)
+                             * np.asarray([0.1, 1.0, 5.0, 0.0]))}
+    W = {"w": jnp.ones((R, 8)), "b": jnp.ones((R,))}
+    age = jnp.asarray([2.0, 7.0, 1.0, 3.0])
+
+    out_g = bafdp.compensate_stale(W, comp, age, fed_g)
+    out_p = bafdp.compensate_stale(W, comp, age, fed_p)
+
+    flat = np.concatenate([np.asarray(comp["w"]),
+                           np.asarray(comp["b"])[:, None]], axis=1)
+    rms = np.sqrt(np.mean(flat ** 2, axis=1))
+    damp = 0.5 / (rms + 0.5)
+    move_g = np.asarray(W["w"]) - np.asarray(out_g["w"])
+    move_p = np.asarray(W["w"]) - np.asarray(out_p["w"])
+    # rows with comp == 0 don't move in either mode (row 3); elsewhere the
+    # per-client movement is the globally-scaled one times damp_i (device
+    # rms is f32, the numpy reference f64 — tolerance covers the gap)
+    np.testing.assert_allclose(move_p, move_g * damp[:, None],
+                               rtol=2e-3, atol=1e-8)
+    assert np.all(move_p[3] == 0)
+    # zero-momentum row: damp = 1, per_client == global exactly
+    np.testing.assert_array_equal(np.asarray(out_p["b"])[3],
+                                  np.asarray(out_g["b"])[3])
+
+
+def test_per_client_compensation_age_zero_rows_untouched():
+    R = 3
+    fed = FedConfig(n_clients=R, staleness_compensation="taylor",
+                    compensation_scale_mode="per_client")
+    comp = {"w": jnp.ones((R, 4))}
+    W = {"w": 2.0 * jnp.ones((R, 4))}
+    out = bafdp.compensate_stale(W, comp, jnp.asarray([0.0, 4.0, 0.0]), fed)
+    w = np.asarray(out["w"])
+    np.testing.assert_array_equal(w[0], 2.0)
+    np.testing.assert_array_equal(w[2], 2.0)
+    assert np.all(w[1] < 2.0)
+
+
+def test_unknown_compensation_scale_mode_raises():
+    fed = FedConfig(n_clients=2, staleness_compensation="taylor",
+                    compensation_scale_mode="typo")
+    with pytest.raises(ValueError, match="compensation_scale_mode"):
+        bafdp.compensate_stale({"w": jnp.ones((2, 3))},
+                               {"w": jnp.ones((2, 3))},
+                               jnp.asarray([1.0, 2.0]), fed)
