@@ -11,35 +11,45 @@ are plotted against come from a single schedule, not two unrelated ones.
 Beyond the sync-vs-async headline, ``SCENARIOS`` exercises the federation
 policy API on the first dataset: a bounded-staleness fleet (age-aware
 selection + adaptive quorum + Taylor staleness compensation), surge
-arrivals (bursty stragglers), flapping availability (dropout/rejoin), and
-the FedBuff K-arrivals buffered server — each trained on its own
-simulated schedule.
+arrivals (bursty stragglers), flapping availability (dropout/rejoin), the
+FedBuff K-arrivals buffered server, and the trace-driven **device
+scenario pack** (``repro.core.devices.SCENARIO_PACK``: diurnal windows,
+correlated regional outages, flash crowds, battery/network latency
+tails) — each trained on its own simulated schedule, so robustness and
+efficiency claims sweep a fleet *portfolio* instead of three hand-tuned
+knobs.
 
 ``with_meta=True`` additionally returns per-dataset metadata (the masks,
 staleness, realized quorums, and per-round ``n_active`` the training loop
-actually saw) so tests can assert the consistency end to end.
+actually saw) so tests can assert the consistency end to end.  Meta is
+the ONLY consumer of the dense ``Schedule.to_sim()`` matrices — the
+summary rows read ``winner_ages``/``Schedule.quorum`` straight off the
+sparse schedule, so scenario fleets can scale C without a dense detour.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from benchmarks.common import ROUNDS, train_bafdp
 from repro.configs import FedConfig
 from repro.core.async_engine import DelayModel
+from repro.core.devices import device_scenario
 from repro.core.schedule import (AdaptiveQuorum, AgeAwareSelection,
                                  FedBuffTrigger, QuorumTrigger, SyncTrigger,
                                  build_schedule)
 
 ACTIVE_FRAC = 0.6
 
-# scenario variants: (DelayModel overrides, trigger factory, FedConfig
-# overrides).  All run async server modes with the schedule's staleness
-# vectors plumbed into training (decay + Taylor compensation see the
-# schedule's consumption ages).
+# scenario variants: (delay/device model spec, trigger factory, FedConfig
+# overrides).  The model spec is either a DelayModel kwargs dict or a
+# ``(n_clients, seed) -> DelayModel | DeviceModel`` factory (the device
+# scenario pack).  All run async server modes with the schedule's
+# staleness vectors plumbed into training (decay + Taylor compensation
+# see the schedule's consumption ages).
 SCENARIOS = {
     "age_adaptive": (           # bounded-staleness fleet
         dict(hetero=1.8, jitter=0.1),
@@ -62,27 +72,70 @@ SCENARIOS = {
         lambda: FedBuffTrigger(buffer_k=5),
         dict(staleness_decay="poly", fedbuff_lr_norm=True,
              sign_message="int8")),
+    # ---- trace-driven device scenario pack (core/devices.py) ------------
+    "diurnal": (                # day/night windows phase the participation
+        lambda n, seed: device_scenario("diurnal", n, seed),
+        lambda: QuorumTrigger(active_frac=ACTIVE_FRAC,
+                              quorum=AdaptiveQuorum(s_min=1),
+                              selection=AgeAwareSelection()),
+        dict(staleness_decay="poly", staleness_compensation="taylor")),
+    "regional_outage": (        # whole regions go dark together
+        lambda n, seed: device_scenario("regional_outage", n, seed),
+        lambda: QuorumTrigger(active_frac=ACTIVE_FRAC,
+                              quorum=AdaptiveQuorum(s_min=1)),
+        dict(staleness_decay="hinge")),
+    "flash_crowd": (            # surges flood the FedBuff buffer
+        lambda n, seed: device_scenario("flash_crowd", n, seed),
+        lambda: FedBuffTrigger(buffer_k=5),
+        dict(staleness_decay="poly", fedbuff_lr_norm=True)),
+    "battery_tail": (           # stateful low-power/cellular straggler tail
+        lambda n, seed: device_scenario("battery_tail", n, seed),
+        lambda: QuorumTrigger(active_frac=ACTIVE_FRAC,
+                              quorum=AdaptiveQuorum(s_min=2),
+                              selection=AgeAwareSelection()),
+        dict(staleness_decay="poly")),
 }
+
+# the scenario names backed by the device pack (tests iterate these)
+DEVICE_SCENARIOS = ("diurnal", "regional_outage", "flash_crowd",
+                    "battery_tail")
+
+
+def scenario_model(name: str, n: int, seed: int):
+    """The scenario's delay/device model at fleet size ``n``."""
+    spec = SCENARIOS[name][0]
+    if callable(spec):
+        return spec(n, seed)
+    return DelayModel(**{"n_clients": n, "hetero": 1.0, "seed": seed,
+                         **spec})
 
 
 def run_scenario(name: str, dataset: str, rounds: int, n: int = 8,
-                 seed: int = 0) -> Tuple[str, Dict]:
-    dm_kw, trigger_fn, fed_kw = SCENARIOS[name]
+                 seed: int = 0, with_meta: bool = False
+                 ) -> Tuple[str, Optional[Dict]]:
+    _, trigger_fn, fed_kw = SCENARIOS[name]
     t0 = time.time()
-    dm = DelayModel(**{"n_clients": n, "hetero": 1.0, "seed": seed, **dm_kw})
-    sched = build_schedule(rounds, dm, trigger_fn())
-    sim = sched.to_sim()
+    sched = build_schedule(rounds, scenario_model(name, n, seed),
+                           trigger_fn())
     fed = dataclasses.replace(
         FedConfig(n_clients=n, active_frac=ACTIVE_FRAC), **fed_kw)
     _, _, h = train_bafdp(dataset, 1, fed, rounds, schedule=sched,
                           collect=("data_loss", "n_active"))
     loss = np.asarray(h["data_loss"])
     us = (time.time() - t0) * 1e6 / max(rounds, 1)
+    # summary stats straight off the sparse schedule: max_stale is the
+    # worst *admission* age any consumed delivery carried (winner_ages),
+    # mean_quorum the per-round distinct participants — no (R, C)
+    # densification on the reporting path
     row = (f"fig456/{dataset}:{name},{us:.1f},"
-           f"t_total_s={sim.times[-1]:.1f};max_stale={sim.staleness.max()};"
-           f"mean_quorum={sim.quorum.mean():.2f};"
+           f"t_total_s={sched.times[-1]:.1f};"
+           f"max_stale={sched.winner_ages.max(initial=0)};"
+           f"mean_quorum={sched.quorum.mean():.2f};"
            f"mean_arrivals={sched.arrivals.mean():.2f};"
            f"final_loss={loss[-1]:.4f}")
+    if not with_meta:
+        return row, None
+    sim = sched.to_sim()       # test-only densification
     meta = {"scenario": name, "masks": sim.active,
             "staleness": sim.staleness, "quorum": sim.quorum,
             "arrivals": sched.arrivals,
@@ -101,7 +154,6 @@ def main(rounds: int = ROUNDS, quick: bool = False, with_meta: bool = False
         sched_async = build_schedule(
             rounds, dm, QuorumTrigger(active_frac=ACTIVE_FRAC))
         sched_sync = build_schedule(rounds, dm, SyncTrigger())
-        sim_async, sim_sync = sched_async.to_sim(), sched_sync.to_sim()
 
         # sync = all clients active each round; async = S of M — both train
         # on the schedule the simulator timestamped
@@ -115,7 +167,7 @@ def main(rounds: int = ROUNDS, quick: bool = False, with_meta: bool = False
                                    collect=("data_loss", "n_active"))
         la, ls = np.asarray(h_async["data_loss"]), np.asarray(
             h_sync["data_loss"])
-        t_async, t_sync = sim_async.times, sim_sync.times
+        t_async, t_sync = sched_async.times, sched_sync.times
         target = max(np.nanmin(ls), np.nanmin(la)) * 1.1
 
         def t_to(loss, t):
@@ -128,22 +180,28 @@ def main(rounds: int = ROUNDS, quick: bool = False, with_meta: bool = False
             f"fig456/{dataset},{us:.1f},t_async_s={ta:.1f};t_sync_s={ts:.1f};"
             f"speedup={ts / ta if np.isfinite(ta) and ta > 0 else float('nan'):.2f};"
             f"final_loss_async={la[-1]:.4f};final_loss_sync={ls[-1]:.4f}")
-        meta = {
-            "dataset": dataset,
-            "masks_async": sim_async.active,
-            "masks_sync": sim_sync.active,
-            "staleness_async": sim_async.staleness,
-            "quorum_async": sim_async.quorum,
-            "n_active_async": np.asarray(h_async["n_active"]),
-            "n_active_sync": np.asarray(h_sync["n_active"]),
-            "active_frac": ACTIVE_FRAC,
-            "variants": {},
-        }
+        if with_meta:
+            sim_async, sim_sync = sched_async.to_sim(), sched_sync.to_sim()
+            meta = {
+                "dataset": dataset,
+                "masks_async": sim_async.active,
+                "masks_sync": sim_sync.active,
+                "staleness_async": sim_async.staleness,
+                "quorum_async": sim_async.quorum,
+                "n_active_async": np.asarray(h_async["n_active"]),
+                "n_active_sync": np.asarray(h_sync["n_active"]),
+                "active_frac": ACTIVE_FRAC,
+                "variants": {},
+            }
+        else:
+            meta = {"dataset": dataset, "variants": {}}
         if dataset == datasets[0]:
             for name in sorted(SCENARIOS):
-                row, vmeta = run_scenario(name, dataset, rounds, n=n)
+                row, vmeta = run_scenario(name, dataset, rounds, n=n,
+                                          with_meta=with_meta)
                 rows.append(row)
-                meta["variants"][name] = vmeta
+                if with_meta:
+                    meta["variants"][name] = vmeta
         metas.append(meta)
     if with_meta:
         return rows, metas

@@ -2,6 +2,7 @@
 supporting pieces (DRO, LDP, Byzantine attacks, robust aggregation,
 async simulation)."""
 from repro.core.bafdp import bafdp_round, make_round_fn
+from repro.core.devices import SCENARIO_PACK, DeviceModel, device_scenario
 from repro.core.fed_state import FedState, init_fed_state
 from repro.core.schedule import (
     AdaptiveQuorum,
@@ -23,6 +24,7 @@ __all__ = [
     "AdaptiveQuorum",
     "AgeAwareSelection",
     "AggregationTrigger",
+    "DeviceModel",
     "FastestSelection",
     "FedBuffTrigger",
     "FederatedRun",
@@ -30,11 +32,13 @@ __all__ = [
     "FixedQuorum",
     "QuorumPolicy",
     "QuorumTrigger",
+    "SCENARIO_PACK",
     "Schedule",
     "SelectionPolicy",
     "SyncTrigger",
     "bafdp_round",
     "build_schedule",
+    "device_scenario",
     "init_fed_state",
     "make_round_fn",
 ]

@@ -116,6 +116,31 @@ class EpsLedger:
         np.add.at(self.deliveries, ids, 1)
         np.maximum.at(self.eps_max, ids, eps)
 
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """Checkpointable ledger state.  A resumed ``FederatedRun`` skips
+        its replayed rounds *before* the ledger block, so a fresh ledger
+        on resume silently loses every replayed spend — checkpoint this
+        alongside the model state and :meth:`load_state_dict` it back to
+        keep the ``dp_eps_*`` curves equal to the uninterrupted run's."""
+        return {"spent": self.spent.copy(),
+                "deliveries": self.deliveries.copy(),
+                "eps_max": self.eps_max.copy()}
+
+    def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
+        """Restore :meth:`state_dict` output (shape-checked)."""
+        missing = {"spent", "deliveries", "eps_max"} - set(state)
+        if missing:
+            raise ValueError(f"ledger state missing keys {sorted(missing)}")
+        shape = (self.n_clients,)
+        for k, dtype in (("spent", np.float64), ("deliveries", np.int64),
+                         ("eps_max", np.float64)):
+            arr = np.asarray(state[k], dtype)
+            if arr.shape != shape:
+                raise ValueError(
+                    f"ledger state {k!r} has shape {arr.shape}, expected "
+                    f"{shape}")
+            setattr(self, k, arr.copy())
+
     def basic(self) -> np.ndarray:
         """Per-client basic (sequential) composition totals."""
         return self.spent.copy()

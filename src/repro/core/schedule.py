@@ -37,6 +37,14 @@ dense path except when ``burst_prob > 0`` (the dense path draws the whole
 jitter matrix before the burst matrix; streaming gives bursts their own
 RNG stream, ``seed + 3``).
 
+Device realism: ``build_schedule`` also accepts a
+:class:`repro.core.devices.DeviceModel` wrapping a ``DelayModel`` — the
+device layer (diurnal participation windows, battery/network-conditioned
+latency, correlated regional outages, flash-crowd surges) applies its
+row-sequential state machines on top of the base rows in BOTH providers,
+so device fleets stream at C=1M and keep dense/stream parity whenever the
+base model does.
+
 Schedules are horizon-**prefix-stable**: a shorter build equals the first
 rounds of a longer one (burst-free dense, or any streaming build), so a
 checkpointed run can resume against a re-built longer schedule without
@@ -61,6 +69,7 @@ from typing import (
 import numpy as np
 
 from repro.core.async_engine import DelayModel, SimResult
+from repro.core.devices import DeviceModel, split_model
 
 
 # ===========================================================================
@@ -275,11 +284,23 @@ def _arrival_ages(r: int, last_part: np.ndarray,
 # ===========================================================================
 class _DenseRows:
     """Materializes the full (R, C) latency/availability matrices — the
-    PR-1/PR-2 RNG consumption order, bit-compatible with the digest pins."""
+    PR-1/PR-2 RNG consumption order, bit-compatible with the digest pins.
 
-    def __init__(self, dm: DelayModel, n_rounds: int):
+    A :class:`~repro.core.devices.DeviceModel` layers its per-client
+    latency multipliers / availability masks row-by-row over the base
+    matrices: the device machines are strictly row-sequential (their own
+    RNG streams), so this matches :class:`_StreamRows` bit-for-bit
+    whenever the base model does (``burst_prob == 0``)."""
+
+    def __init__(self, model, n_rounds: int):
+        dm, dev = split_model(model)
         self._d = dm.round_delays(n_rounds)
         self._avail = dm.availability(n_rounds)
+        if dev is not None:
+            st = dev.state()
+            for r in range(n_rounds):
+                self._d[r] = st.scale_delays(r, self._d[r])
+                self._avail[r] = st.mask_avail(r, self._avail[r])
 
     def delays(self, r: int) -> np.ndarray:
         return self._d[r]
@@ -296,10 +317,14 @@ class _StreamRows:
     get a dedicated burst stream (``seed + 3``) and therefore a different —
     equally valid — schedule.  Rows must be requested in nondecreasing
     order; only the last two delay rows stay cached (round ``r`` touches
-    rows ``r`` and ``r + 1``)."""
+    rows ``r`` and ``r + 1``).  A :class:`~repro.core.devices.DeviceModel`
+    applies its row-sequential latency multipliers / availability masks on
+    top of the base rows — still O(C) live memory."""
 
-    def __init__(self, dm: DelayModel, n_rounds: int):
+    def __init__(self, model, n_rounds: int):
+        dm, dev = split_model(model)
         self._dm = dm
+        self._dev = dev.state() if dev is not None else None
         self._R = n_rounds
         self._bases = dm.client_bases()
         self._jit_rng = np.random.RandomState(dm.seed + 1)
@@ -311,18 +336,22 @@ class _StreamRows:
         self._next_avail_row = 0
         self._avail_cur = np.ones(dm.n_clients, bool)
 
-    def _gen_delay_row(self) -> np.ndarray:
+    def _gen_delay_row(self, r: int) -> np.ndarray:
         dm = self._dm
         jit = dm.burst_row(self._burst_rng, dm.jitter_row(self._jit_rng))
         # latency-lie attack applied identically to the dense builder's
         # rows (draw-free, so stream/dense parity is unaffected)
-        return dm.lie_row(self._bases * jit + dm.comm)
+        row = dm.lie_row(self._bases * jit + dm.comm)
+        if self._dev is not None:
+            row = self._dev.scale_delays(r, row)
+        return row
 
     def delays(self, r: int) -> np.ndarray:
         if r >= self._R:
             raise IndexError(r)
         while self._next_delay_row <= r:
-            self._delay_cache[self._next_delay_row] = self._gen_delay_row()
+            self._delay_cache[self._next_delay_row] = \
+                self._gen_delay_row(self._next_delay_row)
             self._next_delay_row += 1
             for old in [k for k in self._delay_cache
                         if k < self._next_delay_row - 2]:
@@ -336,12 +365,18 @@ class _StreamRows:
     def avail(self, r: int) -> np.ndarray:
         dm = self._dm
         if dm.dropout_prob <= 0:
-            return np.ones(dm.n_clients, bool)
-        while self._next_avail_row <= r:
-            self._avail_cur = dm.avail_step(self._avail_rng, self._avail_cur)
-            self._avail_cache = {self._next_avail_row: self._avail_cur.copy()}
-            self._next_avail_row += 1
-        return self._avail_cache[r]
+            base = np.ones(dm.n_clients, bool)
+        else:
+            while self._next_avail_row <= r:
+                self._avail_cur = dm.avail_step(self._avail_rng,
+                                                self._avail_cur)
+                self._avail_cache = {
+                    self._next_avail_row: self._avail_cur.copy()}
+                self._next_avail_row += 1
+            base = self._avail_cache[r]
+        if self._dev is not None:
+            return self._dev.mask_avail(r, base)
+        return base
 
 
 # ===========================================================================
@@ -620,12 +655,18 @@ class FedBuffTrigger:
 # ===========================================================================
 # builder
 # ===========================================================================
-def build_schedule(n_rounds: int, delays: DelayModel,
+def build_schedule(n_rounds: int, delays: "DelayModel | DeviceModel",
                    trigger: Optional[AggregationTrigger] = None, *,
                    stream: bool = False) -> Schedule:
     """Run the event-driven server loop for ``n_rounds`` rounds under
     ``trigger`` (default: fixed-quorum / fastest-selection, the PR-1
     server) and return the sparse :class:`Schedule`.
+
+    ``delays`` is a :class:`DelayModel` or a
+    :class:`~repro.core.devices.DeviceModel` wrapping one — the device
+    layer (diurnal windows, battery/network latency state, regional
+    outages, flash crowds) composes row-by-row over the base model in
+    both row providers.
 
     ``stream=True`` draws latency/availability rows one round at a time
     (O(C) live memory — required for million-client fleets, where the
@@ -718,7 +759,12 @@ class FederatedRun:
       accounting misses.  Needs a ``schedule=`` and a state carrying a
       per-client ``eps`` vector.  ``history`` then gains running
       worst-client ``dp_eps_basic`` / ``dp_eps_adv`` curves (advanced
-      composition at ``ledger_delta``).
+      composition at ``ledger_delta``).  On checkpoint-resume
+      (``start > 0``) the replayed rounds are skipped *before* the ledger
+      block, so the ledger must be restored from
+      ``EpsLedger.state_dict()`` — a fresh (zero-delivery) ledger over a
+      delivering prefix raises rather than silently undercounting the
+      ``dp_eps_*`` curves.
     """
     step: Callable[..., Tuple[Any, Dict[str, Any]]]
     rounds: int
@@ -740,8 +786,11 @@ class FederatedRun:
             skip_missing: bool = False,
             on_round: Optional[Callable[[int, Any, Dict], None]] = None):
         """Returns ``(final_state, history)`` with ``history[k]`` one entry
-        per round for every ``k`` in ``collect`` (``derive[k](state, m)``
-        when supplied, else ``float(metrics[k])``)."""
+        per trained round (``rounds - start`` of them) for every ``k`` in
+        ``collect`` (``derive[k](state, m)`` when supplied, else
+        ``float(metrics[k])``).  With ``skip_missing=True`` a key absent
+        from a round's metrics contributes ``float("nan")`` — every
+        history list stays aligned with the schedule's round axis."""
         if self.round_impl not in ("dense", "sparse"):
             raise ValueError(
                 f"unknown round_impl: {self.round_impl!r} "
@@ -775,6 +824,16 @@ class FederatedRun:
                 "ledger= needs a schedule= (per-delivery privacy spends "
                 "come from the schedule's participation rows; an internal "
                 "sampler's picks are invisible to the driver)")
+        if self.ledger is not None and self.start > 0 \
+                and int(self.schedule.arrivals[:self.start].sum()) > 0 \
+                and int(np.asarray(self.ledger.deliveries).sum()) == 0:
+            raise ValueError(
+                f"start={self.start} resume with an unprimed ledger: the "
+                "replayed rounds delivered messages whose spends a fresh "
+                "ledger cannot see, so the dp_eps_* curves would "
+                "undercount the true privacy cost.  Checkpoint "
+                "EpsLedger.state_dict() alongside the model state and "
+                "load_state_dict() it before resuming")
         import jax  # deferred: schedule building stays jax-free
 
         derive = derive or {}
@@ -842,7 +901,13 @@ class FederatedRun:
                     hist[k].append(derive[k](state, m))
                 elif k in m:
                     hist[k].append(float(m[k]))
-                elif not skip_missing:
+                elif skip_missing:
+                    # a NaN placeholder keeps history[k] aligned with the
+                    # schedule's round axis — silently appending nothing
+                    # would misalign every loss-vs-wall-clock plot indexed
+                    # against Schedule.times
+                    hist[k].append(float("nan"))
+                else:
                     raise KeyError(
                         f"collect key {k!r} not in metrics {sorted(m)}")
         return state, hist

@@ -56,7 +56,7 @@ def test_fedbuff_benchmark_smoke():
     """Tier-1 acceptance smoke: a FedBuff (K-arrivals) schedule trains
     end-to-end through FederatedRun via the fig456 scenario harness."""
     row, meta = fig456_async_efficiency.run_scenario(
-        "fedbuff", "milano", rounds=4)
+        "fedbuff", "milano", rounds=4, with_meta=True)
     parts = row.split(",", 2)
     assert len(parts) == 3 and parts[0] == "fig456/milano:fedbuff"
     float(parts[1])

@@ -1,0 +1,305 @@
+"""Trace-driven device realism (core/devices.py): the DeviceModel layer
+composes with DelayModel in both row providers — dense<->stream schedule
+parity for burst-free configs, horizon-prefix stability, diurnal windows
+actually gating participation, correlated regional outages, flash-crowd
+surges, battery/network latency state — and every named scenario in the
+pack smoke-trains through the fig456 harness and streams at C=1M without
+any (rounds, C) allocation."""
+import numpy as np
+import pytest
+from conftest import given, settings, st
+
+from repro.core.async_engine import DelayModel
+from repro.core.devices import (DeviceModel, DeviceState, SCENARIO_PACK,
+                                device_scenario)
+from repro.core.schedule import (AdaptiveQuorum, FedBuffTrigger,
+                                 QuorumTrigger, build_schedule)
+
+SCENARIOS = sorted(SCENARIO_PACK)
+
+
+def quorum_trig():
+    return QuorumTrigger(active_frac=0.4, quorum=AdaptiveQuorum(s_min=2))
+
+
+# ---- composition contract --------------------------------------------------
+def test_all_off_device_model_is_passthrough():
+    """Every machine defaults off: DeviceModel(base=dm) reproduces the
+    plain DelayModel schedule bit-for-bit (so the pinned digests transfer
+    to the wrapped form, and enabling one knob never shifts another's RNG
+    stream)."""
+    dm = DelayModel(n_clients=10, hetero=1.2, seed=5, dropout_prob=0.2,
+                    rejoin_prob=0.3)
+    plain = build_schedule(30, dm, quorum_trig())
+    wrapped = build_schedule(30, DeviceModel(base=dm), quorum_trig())
+    assert plain == wrapped
+
+
+@pytest.mark.parametrize("name", SCENARIOS)
+@pytest.mark.parametrize("trig_fn", [quorum_trig,
+                                     lambda: FedBuffTrigger(buffer_k=4)],
+                         ids=["quorum", "fedbuff"])
+def test_device_dense_stream_parity(name, trig_fn):
+    """The _StreamRows contract extends to device fleets: every scenario
+    in the pack is burst-free, so dense and streaming builds must be
+    bit-identical (device machines are row-sequential in both)."""
+    dev = device_scenario(name, 12, seed=3)
+    assert dev.base.burst_prob == 0, "pack scenarios must stay burst-free"
+    dense = build_schedule(40, dev, trig_fn())
+    stream = build_schedule(40, dev, trig_fn(), stream=True)
+    assert dense == stream, name
+
+
+@pytest.mark.parametrize("name", SCENARIOS)
+def test_device_schedule_prefix_stable(name):
+    """A shorter device build is a prefix of a longer one — phases and all
+    Markov draws depend only on the round index, so FederatedRun(start=)
+    resume replay works against a re-built longer schedule."""
+    dev = device_scenario(name, 9, seed=7)
+    short = build_schedule(12, dev, FedBuffTrigger(buffer_k=3))
+    long = build_schedule(30, dev, FedBuffTrigger(buffer_k=3))
+    np.testing.assert_array_equal(short.times, long.times[:12])
+    E = short.offsets[-1]
+    np.testing.assert_array_equal(short.offsets, long.offsets[:13])
+    np.testing.assert_array_equal(short.winner_ids, long.winner_ids[:E])
+    np.testing.assert_array_equal(short.winner_ages, long.winner_ages[:E])
+
+
+def test_device_build_deterministic():
+    dev = device_scenario("flash_crowd", 10, seed=2)
+    a = build_schedule(25, dev, quorum_trig())
+    b = build_schedule(25, dev, quorum_trig())
+    assert a == b
+
+
+# ---- diurnal availability --------------------------------------------------
+def _diurnal_fleet(n, seed, day_rounds=12, duty=0.5):
+    return DeviceModel(base=DelayModel(n_clients=n, hetero=1.0, seed=seed),
+                       day_rounds=day_rounds, duty_frac=duty)
+
+
+def test_diurnal_winner_never_outside_window():
+    """A client outside its diurnal window never wins a round — unless the
+    whole fleet was asleep, in which case exactly one deterministic
+    fallback client is forced awake."""
+    dev = _diurnal_fleet(16, seed=1, day_rounds=24, duty=0.4)
+    phases = dev.phases()
+    sched = build_schedule(80, dev, QuorumTrigger(active_frac=0.3))
+    for r in range(80):
+        awake = dev.awake_mask(r, phases)
+        w = sched.round_winners(r)
+        if awake.any():
+            assert awake[w].all(), (r, w)
+        else:
+            np.testing.assert_array_equal(np.unique(w), [r % 16])
+
+
+@given(seed=st.integers(0, 50), day_rounds=st.integers(2, 30),
+       duty=st.floats(0.1, 0.9))
+@settings(max_examples=25, deadline=None)
+def test_diurnal_window_property(seed, day_rounds, duty):
+    """Hypothesis property: for any diurnal-only fleet, every winner was
+    inside its participation window (or the fleet-dark fallback fired)."""
+    dev = _diurnal_fleet(8, seed=seed, day_rounds=day_rounds, duty=duty)
+    phases = dev.phases()
+    sched = build_schedule(3 * day_rounds, dev,
+                           QuorumTrigger(active_frac=0.4))
+    for r in range(sched.n_rounds):
+        awake = dev.awake_mask(r, phases)
+        w = sched.round_winners(r)
+        if awake.any():
+            assert awake[w].all()
+        else:
+            np.testing.assert_array_equal(np.unique(w), [r % 8])
+
+
+def test_awake_mask_period_and_duty():
+    """The window really is periodic with ~duty_frac coverage per client."""
+    dev = _diurnal_fleet(6, seed=0, day_rounds=10, duty=0.3)
+    phases = dev.phases()
+    rows = np.stack([dev.awake_mask(r, phases) for r in range(20)])
+    np.testing.assert_array_equal(rows[:10], rows[10:])      # periodic
+    np.testing.assert_array_equal(rows[:10].sum(0), 3)       # duty slots
+
+
+# ---- regional outages ------------------------------------------------------
+def test_regional_outage_drops_whole_region():
+    """Availability moves in region blocks: in every round, each region is
+    either fully candidate or fully dark (the correlated failure
+    per-client dropout cannot express)."""
+    dev = DeviceModel(base=DelayModel(n_clients=12, hetero=1.0, seed=4),
+                      n_regions=3, outage_prob=0.3, outage_recover=0.3)
+    region = dev.region_of()
+    st_ = dev.state()
+    ones = np.ones(12, bool)
+    saw_outage = False
+    for r in range(60):
+        avail = st_.mask_avail(r, ones)
+        if avail.sum() == 1 and avail[r % 12]:
+            continue        # whole fleet dark: deterministic fallback round
+        for g in range(3):
+            members = avail[region == g]
+            assert members.all() or not members.any(), (r, g)
+        saw_outage |= not avail.all()
+    assert saw_outage, "outage chain never fired at these rates"
+
+
+def test_region_of_contiguous_blocks():
+    dev = DeviceModel(base=DelayModel(n_clients=10), n_regions=4)
+    region = dev.region_of()
+    assert (np.diff(region) >= 0).all() and region.max() == 3
+
+
+# ---- battery / network latency state --------------------------------------
+def test_battery_tail_multiplies_latency_statefully():
+    """Low-power and cellular states multiply the base delay row; states
+    persist across rounds (a throttled client stays slow for a stretch,
+    unlike iid jitter)."""
+    dev = device_scenario("battery_tail", 50, seed=9)
+    st_ = dev.state()
+    base = np.ones(50)
+    mults = np.stack([st_.scale_delays(r, base) for r in range(40)])
+    assert mults.min() == 1.0                       # some client stays clean
+    assert mults.max() == pytest.approx(6.0 * 2.5)  # both states compose
+    # statefulness: consecutive rounds correlate (a Markov chain, not iid)
+    slow = mults > 1.0
+    stay = (slow[1:] == slow[:-1]).mean()
+    assert stay > 0.6, stay
+
+
+def test_battery_only_multiplier_values():
+    dev = DeviceModel(base=DelayModel(n_clients=30, seed=1),
+                      battery_drain=0.5, battery_charge=0.5,
+                      battery_slow=4.0)
+    st_ = dev.state()
+    m = np.stack([st_.scale_delays(r, np.ones(30)) for r in range(20)])
+    assert set(np.unique(m)) <= {1.0, 4.0}
+
+
+# ---- flash crowds ----------------------------------------------------------
+def test_flash_crowd_wakes_fleet_and_speeds_arrivals():
+    """During a surge every client is available (diurnal sleep overridden)
+    and latency divides by surge_speedup; outside surges the diurnal
+    windows gate as usual."""
+    dev = DeviceModel(base=DelayModel(n_clients=20, hetero=1.0, seed=5),
+                      day_rounds=10, duty_frac=0.3,
+                      surge_prob=0.2, surge_rounds=2, surge_speedup=4.0)
+    st_ = dev.state()
+    ones_f = np.ones(20)
+    ones_b = np.ones(20, bool)
+    surge_rounds, quiet_rounds = 0, 0
+    for r in range(60):
+        d = st_.scale_delays(r, ones_f)
+        a = st_.mask_avail(r, ones_b)
+        if d.max() < 1.0:                       # surge: everyone sped up
+            np.testing.assert_allclose(d, 0.25)
+            assert a.all()                      # and everyone awake
+            surge_rounds += 1
+        else:
+            np.testing.assert_allclose(d, 1.0)
+            assert not a.all()                  # duty 0.3 leaves sleepers
+            quiet_rounds += 1
+    assert surge_rounds and quiet_rounds
+
+
+def test_surge_respects_regional_outage():
+    """A flash crowd never resurrects a dead region: surge availability is
+    still ANDed with the region mask."""
+    dev = DeviceModel(base=DelayModel(n_clients=12, seed=3),
+                      n_regions=2, outage_prob=0.5, outage_recover=0.2,
+                      surge_prob=1.0, surge_rounds=100, surge_speedup=2.0)
+    region = dev.region_of()
+    st_ = dev.state()
+    ones_b = np.ones(12, bool)
+    saw_dark_region = False
+    for r in range(40):
+        avail = st_.mask_avail(r, ones_b)
+        if avail.sum() == 1 and avail[r % 12]:
+            continue        # both regions down: fallback client only
+        for g in range(2):
+            members = avail[region == g]
+            assert members.all() or not members.any()
+        saw_dark_region |= not avail.all()
+    assert saw_dark_region
+
+
+# ---- fleet-dark fallback ---------------------------------------------------
+def test_all_dark_round_forces_one_client():
+    """duty so low that whole-fleet sleep rounds exist: the deterministic
+    fallback keeps >= 1 candidate so the event loop never starves, and
+    the schedule still builds."""
+    dev = DeviceModel(base=DelayModel(n_clients=4, seed=0),
+                      day_rounds=40, duty_frac=0.025)  # 1 awake slot each
+    sched = build_schedule(40, dev, QuorumTrigger(active_frac=0.5))
+    assert sched.n_rounds == 40
+    assert (sched.arrivals >= 1).all()
+
+
+# ---- validation ------------------------------------------------------------
+@pytest.mark.parametrize("kw,msg", [
+    (dict(day_rounds=-1), "day_rounds"),
+    (dict(day_rounds=5, duty_frac=0.0), "duty_frac"),
+    (dict(day_rounds=5, duty_frac=1.5), "duty_frac"),
+    (dict(n_regions=0), "n_regions"),
+    (dict(surge_prob=0.5, surge_rounds=0), "surge_rounds"),
+    (dict(surge_prob=0.5, surge_speedup=0.0), "surge_speedup"),
+])
+def test_device_model_validates(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        DeviceModel(base=DelayModel(n_clients=4), **kw)
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(ValueError, match="unknown device scenario"):
+        device_scenario("nope", 8)
+
+
+def test_device_state_rows_must_be_in_order():
+    st_ = device_scenario("battery_tail", 6, seed=0).state()
+    st_.scale_delays(5, np.ones(6))
+    with pytest.raises(RuntimeError, match="evicted"):
+        st_.scale_delays(0, np.ones(6))
+
+
+def test_device_state_not_shared_between_builds():
+    """DeviceModel.state() hands each build a fresh runtime: two builds
+    from one DeviceModel object are identical (no leaked Markov state)."""
+    dev = device_scenario("regional_outage", 10, seed=6)
+    a = build_schedule(20, dev, quorum_trig())
+    b = build_schedule(20, dev, quorum_trig())
+    assert a == b
+    assert isinstance(dev.state(), DeviceState)
+
+
+# ---- scenario pack through the benchmark harness ---------------------------
+@pytest.mark.parametrize("name", SCENARIOS)
+def test_scenario_pack_smoke_trains_quick(name):
+    """Every named device scenario trains end-to-end through the fig456
+    harness in quick mode and reports its sparse-schedule summary stats
+    (no dense densification on the reporting path)."""
+    from benchmarks import fig456_async_efficiency as fig456
+    assert name in fig456.SCENARIOS
+    assert name in fig456.DEVICE_SCENARIOS
+    row, meta = fig456.run_scenario(name, "milano", rounds=3)
+    assert meta is None                 # densification is opt-in
+    parts = row.split(",", 2)
+    assert parts[0] == f"fig456/milano:{name}"
+    float(parts[1])
+    assert "max_stale=" in parts[2] and "mean_quorum=" in parts[2]
+
+
+def test_million_client_device_stream_smoke(monkeypatch):
+    """CI smoke: every pack scenario streams a C=1_000_000 build with the
+    dense DelayModel entry points poisoned — nothing of shape (rounds, C)
+    is ever allocated, matching the plain-DelayModel contract."""
+    def boom(self, n_rounds):
+        raise AssertionError("dense (rounds, C) allocation in device build")
+
+    monkeypatch.setattr(DelayModel, "round_delays", boom)
+    monkeypatch.setattr(DelayModel, "availability", boom)
+    for name in SCENARIOS:
+        dev = device_scenario(name, 1_000_000, seed=0)
+        sched = build_schedule(2, dev, FedBuffTrigger(buffer_k=32),
+                               stream=True)
+        assert sched.winner_ids.size == 2 * 32, name
+        assert (np.diff(sched.times) >= 0).all(), name

@@ -457,7 +457,129 @@ def test_federated_run_collect_unknown_key_raises():
     with pytest.raises(KeyError, match="nope"):
         run.run([], lambda t: None, jax.random.PRNGKey(0),
                 collect=("nope",))
-    # skip_missing tolerates it (the baseline-trainer contract)
+    # skip_missing tolerates it (the baseline-trainer contract) but keeps
+    # the list aligned with the round axis via NaN placeholders
     _, hist = run.run([], lambda t: None, jax.random.PRNGKey(0),
                       collect=("nope",), skip_missing=True)
-    assert hist["nope"] == []
+    assert len(hist["nope"]) == 2 and np.isnan(hist["nope"]).all()
+
+
+def test_federated_run_skip_missing_keeps_history_aligned():
+    """A metric that only appears on some rounds must not silently shrink
+    its history list: absent rounds contribute NaN so every collected list
+    has length ``rounds - start`` and stays indexable against
+    ``Schedule.times``."""
+    import jax
+
+    def step(state, batch, key, act=None, stale=None):
+        t = len(state)
+        m = {"loss": float(t)}
+        if t % 3 == 0:
+            m["rare"] = float(10 * t)
+        return state + [t], m
+
+    sched = build_schedule(9, DelayModel(n_clients=4, seed=2),
+                           QuorumTrigger(active_frac=0.5))
+    run = FederatedRun(step=step, rounds=9, schedule=sched)
+    _, hist = run.run([], lambda t: None, jax.random.PRNGKey(0),
+                      collect=("loss", "rare"), skip_missing=True)
+    assert all(len(v) == 9 for v in hist.values())
+    rare = np.asarray(hist["rare"])
+    present = np.arange(9) % 3 == 0
+    np.testing.assert_array_equal(rare[present], 10 * np.arange(9)[present])
+    assert np.isnan(rare[~present]).all()
+    # resume at start=4: lists cover exactly the trained suffix
+    run = FederatedRun(step=step, rounds=9, schedule=sched, start=4)
+    _, hist = run.run([], lambda t: None, jax.random.PRNGKey(0),
+                      collect=("loss", "rare"), skip_missing=True)
+    assert all(len(v) == 9 - 4 for v in hist.values())
+    # the fresh call-log state restarts its counter; what matters is the
+    # suffix length and NaN alignment, both already pinned above
+    np.testing.assert_array_equal(hist["loss"], np.arange(9 - 4))
+
+
+# ---- EpsLedger checkpoint-resume -------------------------------------------
+def _eps_state(n):
+    """Minimal state carrying the per-client eps vector the ledger reads."""
+    from collections import namedtuple
+    return namedtuple("S", "eps")(np.linspace(0.5, 2.0, n))
+
+
+def _noop_step(state, batch, key, act=None, stale=None):
+    return state, {"loss": 0.0}
+
+
+def test_eps_ledger_state_dict_round_trip():
+    from repro.core.privacy import EpsLedger
+    led = EpsLedger(5)
+    led.record(np.array([0, 2, 2]), np.array([1.0, 0.5, 0.5]))
+    state = led.state_dict()
+    # the snapshot is decoupled from the live ledger
+    led.record(np.array([1]), np.array([9.0]))
+    fresh = EpsLedger(5)
+    fresh.load_state_dict(state)
+    np.testing.assert_array_equal(fresh.spent, [1.0, 0, 1.0, 0, 0])
+    np.testing.assert_array_equal(fresh.deliveries, [1, 0, 2, 0, 0])
+    np.testing.assert_array_equal(fresh.eps_max, [1.0, 0, 0.5, 0, 0])
+    with pytest.raises(ValueError, match="shape"):
+        EpsLedger(3).load_state_dict(state)
+    with pytest.raises(ValueError, match="missing"):
+        EpsLedger(5).load_state_dict({"spent": np.zeros(5)})
+
+
+def test_ledger_resume_reproduces_uninterrupted_curves():
+    """The DP regression pinned by this PR: a killed-and-resumed run whose
+    ledger was checkpointed with ``state_dict()`` and restored reproduces
+    the uninterrupted run's ``dp_eps_basic``/``dp_eps_adv`` curves exactly
+    — on a FedBuff schedule where duplicate deliveries make per-round
+    accounting (and a fresh ledger) undercount."""
+    import jax
+    from repro.core.privacy import EpsLedger
+    rounds, half, n = 8, 4, 6
+    sched = build_schedule(rounds, DelayModel(n_clients=n, hetero=2.5,
+                                              seed=3),
+                           FedBuffTrigger(buffer_k=5))
+    assert (sched.arrivals > sched.quorum).any()   # duplicates present
+    state = _eps_state(n)
+    key = jax.random.PRNGKey(0)
+
+    run_full = FederatedRun(step=_noop_step, rounds=rounds, schedule=sched,
+                            ledger=EpsLedger(n))
+    _, hist_full = run_full.run(state, lambda t: None, key)
+
+    # interrupted at `half`: checkpoint the ledger with the model state
+    led1 = EpsLedger(n)
+    run_a = FederatedRun(step=_noop_step, rounds=half, schedule=sched,
+                         ledger=led1)
+    _, hist_a = run_a.run(state, lambda t: None, key)
+    ckpt = led1.state_dict()
+
+    led2 = EpsLedger(n)
+    led2.load_state_dict(ckpt)
+    run_b = FederatedRun(step=_noop_step, rounds=rounds, schedule=sched,
+                         start=half, ledger=led2)
+    _, hist_b = run_b.run(state, lambda t: None, key)
+
+    for k in ("dp_eps_basic", "dp_eps_adv"):
+        resumed = hist_a[k] + hist_b[k]
+        assert len(resumed) == rounds
+        np.testing.assert_array_equal(resumed, hist_full[k], err_msg=k)
+
+
+def test_ledger_resume_with_fresh_ledger_raises():
+    """The bug this PR fixes, now a loud error: resuming past a delivering
+    prefix with a zero-delivery ledger would silently drop the replayed
+    spends from the dp_eps_* curves."""
+    import jax
+    from repro.core.privacy import EpsLedger
+    sched = build_schedule(6, DelayModel(n_clients=4, seed=1),
+                           QuorumTrigger(active_frac=0.5))
+    run = FederatedRun(step=_noop_step, rounds=6, schedule=sched, start=3,
+                       ledger=EpsLedger(4))
+    with pytest.raises(ValueError, match="unprimed ledger"):
+        run.run(_eps_state(4), lambda t: None, jax.random.PRNGKey(0))
+    # start=0 with a fresh ledger is of course fine
+    run = FederatedRun(step=_noop_step, rounds=3, schedule=sched,
+                       ledger=EpsLedger(4))
+    _, hist = run.run(_eps_state(4), lambda t: None, jax.random.PRNGKey(0))
+    assert len(hist["dp_eps_basic"]) == 3
